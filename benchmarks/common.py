@@ -1,0 +1,141 @@
+"""Shared benchmark infrastructure: topology suites (with cached searches),
+ratio tables, CSV emission.
+
+Searches are seeded and cached under results/benchcache/ so `-m benchmarks.run`
+is fast on re-runs while remaining fully reproducible from scratch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core import graphs, metrics, netsim, search  # noqa: E402
+from repro.core.graphs import Graph, from_edges  # noqa: E402
+
+CACHE_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "results", "benchcache")
+
+
+def cached_graph(key: str, builder) -> Graph:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    fn = os.path.join(CACHE_DIR, key + ".json")
+    if os.path.exists(fn):
+        with open(fn) as f:
+            d = json.load(f)
+        return from_edges(d["n"], [tuple(e) for e in d["edges"]], d["name"])
+    g = builder()
+    with open(fn, "w") as f:
+        json.dump({"n": g.n, "edges": [list(e) for e in g.edges], "name": g.name}, f)
+    return g
+
+
+def optimal(n: int, k: int, seed: int = 0, budget: int = 5000, method=None) -> Graph:
+    return cached_graph(f"opt_{n}_{k}_{seed}",
+                        lambda: search.find_optimal(n, k, seed=seed, budget=budget,
+                                                    method=method))
+
+
+def suboptimal_sym(n: int, k: int, seed: int = 0, n_iter: int = 1500, fold: int = 4) -> Graph:
+    return cached_graph(
+        f"subopt_{n}_{k}_{seed}_{n_iter}",
+        lambda: search.symmetric_sa_search(n, k, seed=seed, n_iter=n_iter, fold=fold).graph)
+
+
+# ------------------------------------------------------------------------------
+# Topology suites (paper benchmark sets)
+# ------------------------------------------------------------------------------
+
+def suite16() -> dict[str, Graph]:
+    return {
+        "(16,2)-Ring": graphs.ring(16),
+        "(16,3)-Wagner": graphs.wagner(16),
+        "(16,3)-Bidiakis": graphs.bidiakis(16),
+        "(16,3)-Optimal": optimal(16, 3),
+        "(16,4)-Torus": graphs.torus([4, 4]),
+        "(16,4)-Optimal": optimal(16, 4),
+    }
+
+
+def suite32() -> dict[str, Graph]:
+    return {
+        "(32,2)-Ring": graphs.ring(32),
+        "(32,3)-Wagner": graphs.wagner(32),
+        "(32,3)-Bidiakis": graphs.bidiakis(32),
+        "(32,3)-Optimal": optimal(32, 3, budget=6000),
+        "(32,4)-Torus": graphs.torus([4, 8]),
+        "(32,4)-Chvatal": graphs.chvatal32(),
+        "(32,4)-Optimal": optimal(32, 4, budget=6000),
+    }
+
+
+def suite_dragonfly() -> dict[str, tuple[Graph, Graph]]:
+    """(optimal, dragonfly) pairs for TABLE 2/3."""
+    return {
+        "(20,4)": (optimal(20, 4), graphs.dragonfly(4, 5, 1)),
+        "(30,5)": (optimal(30, 5), graphs.dragonfly(5, 6, 1)),
+        "(36,5)": (optimal(36, 5), graphs.dragonfly(4, 9, 2)),
+    }
+
+
+def suite256() -> dict[str, Graph]:
+    return {
+        "(256,2)-Ring": graphs.ring(256),
+        "(256,3)-Wagner": graphs.wagner(256),
+        "(256,3)-Bidiakis": graphs.bidiakis(256),
+        "(256,3)-Suboptimal": suboptimal_sym(256, 3),
+        "(256,4)-Torus": graphs.torus([16, 16]),
+        "(256,4)-Suboptimal": suboptimal_sym(256, 4),
+        "(256,6)-Torus": graphs.torus([4, 8, 8]),
+        "(256,6)-Suboptimal": suboptimal_sym(256, 6),
+        "(256,8)-Torus": graphs.torus([4, 4, 4, 4]),
+        "(256,8)-Suboptimal": suboptimal_sym(256, 8),
+    }
+
+
+def suite_large_dragonfly() -> dict[str, tuple[Graph, Graph]]:
+    return {
+        # perfect palmtree instances (g = a*h + 1 => regular): degree 11
+        "(252,11)": (cached_graph("opt_252_11",
+                                  lambda: search.circulant_search(252, 11, seed=0, n_iter=400).graph),
+                     graphs.dragonfly(9, 28, 3)),
+        "(264,11)": (cached_graph("opt_264_11",
+                                  lambda: search.circulant_search(264, 11, seed=0, n_iter=400).graph),
+                     graphs.dragonfly(8, 33, 4)),
+    }
+
+
+# ------------------------------------------------------------------------------
+# Reporting
+# ------------------------------------------------------------------------------
+
+class Rows:
+    """Collects (name, us_per_call, derived) CSV rows + saves JSON."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, seconds: float, derived: str) -> None:
+        self.rows.append((f"{self.bench}/{name}", seconds * 1e6, derived))
+
+    def emit(self) -> None:
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.3f},{derived}")
+
+    def save(self) -> None:
+        out = os.path.join(os.path.dirname(CACHE_DIR), "benchmarks")
+        os.makedirs(out, exist_ok=True)
+        with open(os.path.join(out, self.bench + ".json"), "w") as f:
+            json.dump([{"name": n, "us": u, "derived": d} for n, u, d in self.rows], f, indent=1)
+
+
+def ratios_to_ring(times: dict[str, float], ring_key: str | None = None) -> dict[str, float]:
+    ring_key = ring_key or next(k for k in times if "Ring" in k)
+    t0 = times[ring_key]
+    return {k: t0 / v for k, v in times.items()}

@@ -1,0 +1,19 @@
+"""Paper Fig 3: mean ping-pong latency performance ratios to ring."""
+import time
+
+from . import common
+from repro.core import metrics, netsim
+
+
+def run() -> common.Rows:
+    rows = common.Rows("fig3")
+    for suite in (common.suite16(), common.suite32()):
+        lat = {}
+        for name, g in suite.items():
+            t0 = time.perf_counter()
+            lat[name] = netsim.pingpong_mean_latency(netsim.TAISHAN(g))
+            dt = time.perf_counter() - t0
+        ratios = common.ratios_to_ring(lat)
+        for name, g in suite.items():
+            rows.add(name, lat[name], f"ratio={ratios[name]:.3f} MPL={metrics.mpl(g):.3f}")
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Fig 6: 1-D parallel FFTE ratios to ring at 2^21 and 2^27 points
+(32 MB / 2 GB arrays).  Anchors: (16,4)-Opt 1.85, (32,4)-Opt 2.31 at 2 GB."""
+import time
+
+from . import common
+from repro.core import netsim
+
+LENS = {"32MB": 1 << 21, "2GB": 1 << 27}
+
+
+def run() -> common.Rows:
+    rows = common.Rows("fig6")
+    for suite in (common.suite16(), common.suite32()):
+        clusters = {n: netsim.TAISHAN(g) for n, g in suite.items()}
+        for ln, n_pts in LENS.items():
+            times = {name: netsim.ffte_1d(cl, n_pts) for name, cl in clusters.items()}
+            ratios = common.ratios_to_ring(times)
+            for name in suite:
+                rows.add(f"{ln}/{name}", times[name], f"ratio={ratios[name]:.3f}")
+    return rows

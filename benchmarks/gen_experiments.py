@@ -1,0 +1,253 @@
+"""Generate EXPERIMENTS.md from results/ artifacts (dryrun.json,
+hillclimb.json, benchmarks/*.json).
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments > EXPERIMENTS.md
+"""
+import json
+import os
+import sys
+
+from . import common  # noqa: F401  (sets sys.path)
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from .roofline import model_flops, PEAK_FLOPS
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RES = os.path.join(ROOT, "results")
+
+
+def load(fn):
+    p = os.path.join(RES, fn)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def bench_rows(name):
+    p = os.path.join(RES, "benchmarks", name + ".json")
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def gib(x):
+    return f"{x/2**30:.2f}"
+
+
+def main():
+    dry = load("dryrun.json")
+    hill = load("hillclimb.json")
+    out = []
+    w = out.append
+
+    w("# EXPERIMENTS — Optimal Low-Latency Network Topologies (Deng et al., 2019)")
+    w("")
+    w("All numbers regenerate with:")
+    w("```")
+    w("PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --out results/dryrun.json")
+    w("PYTHONPATH=src python -m repro.launch.hillclimb")
+    w("PYTHONPATH=src python -m benchmarks.run")
+    w("PYTHONPATH=src python -m benchmarks.gen_experiments > EXPERIMENTS.md")
+    w("```")
+    w("")
+
+    # ------------------------------------------------------------- paper repro
+    w("## §Paper-reproduction (validated against the paper's own claims)")
+    w("")
+    w("### TABLE 1 — graph properties (exact-match check)")
+    w("")
+    w("| topology | ours D/MPL/BW | paper D/MPL/BW | match |")
+    w("|---|---|---|---|")
+    for r in bench_rows("table1"):
+        d = r["derived"]
+        # derived: "D=4/4 MPL=2.6000/2.6 BW=4/4 match=Y gapMPL=+0.400"
+        parts = dict(p.split("=", 1) for p in d.split() if "=" in p)
+        ours = f"{parts['D'].split('/')[0]} / {parts['MPL'].split('/')[0]} / {parts['BW'].split('/')[0]}"
+        paper = f"{parts['D'].split('/')[1]} / {parts['MPL'].split('/')[1]} / {parts['BW'].split('/')[1]}"
+        w(f"| {r['name'].split('/')[-1]} | {ours} | {paper} | {parts['match']} |")
+    w("")
+    w("Both `Optimal` rows at N=32 are the pinned graphs from the deep search")
+    w("(`core/known_optimal.py`): they meet the Cerf lower bound exactly, with")
+    w("girth 5 / 7 — consistent with the paper's girth-constrained search.")
+    w("")
+
+    for key, title in [("fig3", "Fig 3 — ping-pong mean-latency ratios to ring"),
+                       ("fig5", "Fig 5 — effective bandwidth (b_eff)"),
+                       ("fig7", "Fig 7 — Graph500"),
+                       ("table2_3", "TABLE 2/3 — optimal vs Dragonfly"),
+                       ("table4", "TABLE 4 — 256-node properties + bound gaps"),
+                       ("table5_6", "TABLE 5/6 — (252/264,11) optimal vs Dragonfly"),
+                       ("fig10", "Fig 10 — 256-node simulated application ratios")]:
+        rows = bench_rows(key)
+        if not rows:
+            continue
+        w(f"### {title}")
+        w("")
+        w("| benchmark | result |")
+        w("|---|---|")
+        for r in rows:
+            w(f"| {r['name'].split('/', 1)[-1]} | {r['derived']} |")
+        w("")
+
+    # ------------------------------------------------------------- dry-run
+    w("## §Dry-run — every (arch × shape × mesh) lowers + compiles")
+    w("")
+    w("Meshes: single-pod (16, 16) = 256 chips ('data', 'model'); multi-pod")
+    w("(2, 16, 16) = 512 chips ('pod', 'data', 'model').  `fits` = peak HBM")
+    w("(memory_analysis, includes live arguments) ≤ 16 GiB/chip (v5e).")
+    w("")
+    w("| arch | shape | mesh | compile | args GiB | peak GiB | fits |")
+    w("|---|---|---|---|---|---|---|")
+    for r in sorted(dry, key=lambda x: (x["arch"], x["shape"], x["multi_pod"])):
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        if r.get("status") == "skipped":
+            w(f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — | skip (full-attention @500k) |")
+            continue
+        if r.get("status") != "ok":
+            w(f"| {r['arch']} | {r['shape']} | {mesh} | ERROR | | | {r.get('error','')[:60]} |")
+            continue
+        mm = r["memory"]
+        w(f"| {r['arch']} | {r['shape']} | {mesh} | {r['compile_s']:.0f}s "
+          f"| {gib(mm['argument_bytes'])} | {gib(mm['peak_bytes'])} "
+          f"| {'Y' if r.get('fits_hbm') else 'NO'} |")
+    w("")
+
+    # ------------------------------------------------------------- roofline
+    w("## §Roofline — per (arch × shape), single-pod 256 chips")
+    w("")
+    w("Terms per assignment: compute = HLO_FLOPs/(chips·197 TF/s); memory =")
+    w("HLO_bytes/(chips·819 GB/s); collective = wire_bytes/(chips·50 GB/s).")
+    w("HLO figures come from 1-/2-layer fully-unrolled lowers extrapolated")
+    w("linearly over depth (XLA counts while-loop bodies once — validated:")
+    w("extrapolated FLOPs match 6·N·D within layer-structure effects).")
+    w("`useful` = MODEL_FLOPS / HLO_FLOPS; `r_frac` = useful-compute time /")
+    w("dominant-term time (the roofline fraction scored in §Perf).")
+    w("")
+    w("| arch | shape | compute | memory | collective | dominant | useful | r_frac |")
+    w("|---|---|---|---|---|---|---|---|")
+    base_rows = {}
+    for r in sorted(dry, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("multi_pod") or r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo = r["hlo_flops_per_chip"] * r["n_chips"]
+        useful = mf / hlo if hlo else 0.0
+        t_bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        rfrac = (mf / r["n_chips"] / PEAK_FLOPS) / t_bound if t_bound else 0.0
+        base_rows[(r["arch"], r["shape"])] = (t_bound, rfrac)
+        w(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.2f}s | {rl['memory_s']:.2f}s "
+          f"| {rl['collective_s']:.2f}s | {rl['dominant'].replace('_s','')} "
+          f"| {useful:.2f} | {rfrac:.3f} |")
+    w("")
+    w("Reading guide: the memory term is a no-fusion upper bound (XLA's")
+    w("`bytes accessed` counts every HLO op's operands); it is consistent")
+    w("across variants, so §Perf optimizes it as a relative metric.  One")
+    w("sentence per dominant term on what moves it down: compute — fewer")
+    w("rematerialized FLOPs (remat policy) and MoE capacity-factor waste;")
+    w("memory — remat policy ('dots'/'names'), bf16 intermediates, Pallas")
+    w("kernels keeping attention/SSD working sets in VMEM; collective —")
+    w("sharding that avoids weight gathers (weight-stationary decode),")
+    w("sequence parallelism, microbatch count (FSDP gather amortization),")
+    w("and the paper's own lever: topology/layout (core/layout.py) to make")
+    w("every remaining collective step 1-hop.")
+    w("")
+
+    # ------------------------------------------- topology-adjusted collectives
+    tt = bench_rows("topology_term")
+    if tt:
+        w("### Topology-adjusted collective term (the paper applied to our own traffic)")
+        w("")
+        w("The flat collective term assumes 1 link-hop per wire byte.  Ring-")
+        w("schedule collectives (AR/AG/RS) really are 1-hop, but the EP-MoE")
+        w("**all-to-all** is pairwise — its cost scales with the model-axis")
+        w("subgraph's MPL and static-routing contention (paper Fig. 4d/10a).")
+        w("Re-pricing the dry-run's all-to-all bytes on three candidate 16-chip")
+        w("model-axis topologies (simulator = the one validated against the")
+        w("paper's own benchmarks; TPU ICI link model):")
+        w("")
+        w("| record | result |")
+        w("|---|---|")
+        for r in tt:
+            w(f"| {r['name'].split('/', 1)[-1]} | {r['derived']} |")
+        w("")
+        w("Headline: an OCS-configured **(16,4)-Optimal** model-axis graph cuts")
+        w("the all-to-all wire time 2.13× vs a ring row and 1.53× vs a torus")
+        w("row — the paper's result, reproduced on this framework's own")
+        w("collective traffic.  For ring-schedule-only cells (qwen3 base) the")
+        w("topology is already optimal, also as the paper predicts for")
+        w("nearest-neighbour patterns.")
+        w("")
+
+    # ------------------------------------------------------------- perf
+    w("## §Perf — hillclimb log (hypothesis → change → before/after)")
+    w("")
+    w("Three cells selected per assignment: worst roofline fraction among")
+    w("large cells (kimi train_4k), most collective-bound (kimi decode_32k,")
+    w("collective/compute ≈ 115×), most representative of the paper's")
+    w("technique (qwen3-32b train_4k — the TP/DP collective pattern whose")
+    w("latency the paper's topologies minimize).")
+    w("")
+    ok = [r for r in hill if r.get("status") == "ok"]
+    cells = sorted({(r["arch"], r["shape"]) for r in ok})
+    for cell in cells:
+        rows = [r for r in ok if (r["arch"], r["shape"]) == cell]
+        base = next((r for r in rows if r["tag"].endswith("_base")), None)
+
+        def mx(r):
+            rl = r["roofline"]
+            return max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+
+        rows.sort(key=lambda r: (not r["tag"].endswith("_base"),))
+        w(f"### {cell[0]} / {cell[1]}")
+        w("")
+        w("| variant | hypothesis | c / m / x (s) | max | peak GiB | verdict |")
+        w("|---|---|---|---|---|---|")
+        for r in rows:
+            rl = r["roofline"]
+            m = mx(r)
+            if r is base:
+                verdict = "**baseline (paper-faithful)**"
+            elif base is not None:
+                d = (1 - m / mx(base)) * 100
+                verdict = (f"**{d:+.1f}%**" if d >= 5 else f"{d:+.1f}%") + \
+                          (" (refuted)" if d < 1 else " (confirmed)" if d >= 5 else " (<5%)")
+            else:
+                verdict = "—"
+            w(f"| {r['tag']} | {r['hypothesis'][:95]} | "
+              f"{rl['compute_s']:.2f} / {rl['memory_s']:.2f} / {rl['collective_s']:.2f} "
+              f"| {m:.2f} | {r['memory']['peak_bytes']/2**30:.2f} | {verdict} |")
+        if base is not None:
+            best = min(rows, key=mx)
+            mf = model_flops(cell[0], cell[1])
+            n_chips = base["n_chips"]
+            ideal = mf / n_chips / PEAK_FLOPS
+            w("")
+            line = (f"**Result:** dominant term {mx(base):.2f}s → {mx(best):.2f}s "
+                    f"(**{(1 - mx(best)/mx(base))*100:.1f}% better**, best = `{best['tag']}`); ")
+            if SHAPES[cell[1]].kind == "decode":
+                # decode is memory-bound by nature: roofline = read weights +
+                # cache exactly once (= argument bytes) at HBM bandwidth
+                ideal_mem = base["memory"]["argument_bytes"] / 819e9
+                line += (f"memory-roofline fraction (args once / dominant) "
+                         f"{ideal_mem/mx(base):.3f} → {ideal_mem/mx(best):.3f}.")
+            else:
+                line += (f"useful-compute roofline fraction "
+                         f"{ideal/mx(base):.3f} → {ideal/mx(best):.3f}.")
+            w(line)
+            w("")
+    w("**Stop criterion:** each cell ended after three consecutive probes with")
+    w("<5% improvement on its dominant term (see the <5%/refuted rows above).")
+    w("Refuted hypotheses kept for the record: sequence parallelism under this")
+    w("XLA SPMD version adds seq<->heads transition gathers instead of")
+    w("converting the TP all-reduces to reduce-scatter (FSDP and batch share")
+    w("the 'data' axis); single-chunk attention materializes the full (sq,skv)")
+    w("fp32 logits tile; bf16 PV probabilities cost more than they save in the")
+    w("train regime (p-tile >> V-chunk).")
+    w("")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    sys.stdout.write(main() + "\n")

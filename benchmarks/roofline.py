@@ -1,0 +1,52 @@
+"""Assignment roofline: per (arch x shape) three-term roofline from the
+dry-run artifacts (results/dryrun.json), with MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE), the useful-compute ratio, and the dominant bottleneck."""
+import json
+import os
+
+from . import common
+from repro.configs.base import SHAPES, get_config
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun.json")
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D for train (x3 for fwd+bwd... 6ND already includes bwd);
+    2*N*D for prefill; 2*N per token for decode."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_params_B() * 1e9
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per lane
+
+
+def run() -> common.Rows:
+    rows = common.Rows("roofline")
+    if not os.path.exists(RESULTS):
+        rows.add("missing", 0.0, f"run repro.launch.dryrun --all --out {RESULTS} first")
+        return rows
+    with open(RESULTS) as f:
+        records = json.load(f)
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("multi_pod") or r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        n_chips = r["n_chips"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = r["hlo_flops_per_chip"] * n_chips
+        useful = mf / hlo_total if hlo_total else 0.0
+        t_bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        mfu_bound = (mf / n_chips / PEAK_FLOPS) / t_bound if t_bound else 0.0
+        rows.add(f"{r['arch']}/{r['shape']}", t_bound,
+                 f"compute={rl['compute_s']*1e3:.2f}ms memory={rl['memory_s']*1e3:.2f}ms "
+                 f"collective={rl['collective_s']*1e3:.2f}ms dom={rl['dominant']} "
+                 f"useful={useful:.2f} roofline_frac={mfu_bound:.3f} "
+                 f"fits={r.get('fits_hbm')}")
+    return rows

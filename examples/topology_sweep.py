@@ -1,0 +1,65 @@
+"""Reproduce the paper's headline sweep at any size: search optimal graphs at
+several degrees, compare D/MPL/BW + predicted application performance against
+torus/ring, and report the MPL->performance correlation (paper Figs 3-10).
+
+    PYTHONPATH=src python examples/topology_sweep.py --nodes 64
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+from repro.core import graphs, metrics, netsim, search
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--nodes", type=int, default=64)
+    p.add_argument("--budget", type=int, default=2000)
+    args = p.parse_args()
+    n = args.nodes
+
+    topos = {f"({n},2)-Ring": graphs.ring(n)}
+    if n % 2 == 0:
+        topos[f"({n},3)-Wagner"] = graphs.wagner(n)
+    # square-ish torus
+    import math
+    a = int(math.sqrt(n))
+    while n % a:
+        a -= 1
+    topos[f"({n},4)-Torus{a}x{n//a}"] = graphs.torus([a, n // a])
+    for k in (3, 4):
+        g = search.find_optimal(n, k, seed=0, budget=args.budget)
+        topos[g.name] = g
+
+    print(f"{'topology':>22s} {'D':>3s} {'MPL':>7s} {'BW':>4s} | {'alltoall':>8s} {'b_eff':>7s} {'FFTE':>7s} {'IS':>7s}")
+    ring_t = None
+    rows = []
+    for name, g in topos.items():
+        cl = netsim.TAISHAN(g)
+        t = {
+            "a2a": netsim.collective_bench(cl, "alltoall", 1 << 20),
+            "beff": 1.0 / netsim.effective_bandwidth(cl, n_sizes=5, n_random=2),
+            "ffte": netsim.ffte_1d(cl, 1 << 24),
+            "is": netsim.npb(cl, "is", "A"),
+        }
+        if ring_t is None:
+            ring_t = t
+        d = metrics.apsp(g)
+        mpl = metrics.mpl(g, d)
+        rows.append((mpl, ring_t["a2a"] / t["a2a"]))
+        print(f"{name:>22s} {metrics.diameter(g, d):3.0f} {mpl:7.3f} "
+              f"{metrics.bisection_width(g, restarts=8):4d} | "
+              + " ".join(f"{ring_t[k]/t[k]:7.2f}x" for k in ("a2a", "beff", "ffte", "is")))
+    mpls, perf = zip(*rows)
+    rho = np.corrcoef(1.0 / np.asarray(mpls), perf)[0, 1]
+    print(f"\nPearson correlation (1/MPL vs alltoall speed): {rho:.3f} "
+          f"(paper: strong inverse MPL dependence)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

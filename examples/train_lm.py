@@ -1,0 +1,66 @@
+"""End-to-end LM training driver: data pipeline -> sharded model -> AdamW ->
+checkpointed fault-tolerant loop, with loss curve printed.
+
+Presets:
+    cpu   (default)  ~2M params, runs a few hundred steps in minutes on CPU
+    100m             ~100M-param qwen3-style config (use on real accelerators;
+                     identical code path, just bigger dims)
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import Trainer
+
+PRESETS = {
+    "cpu": ArchConfig(name="lm-cpu", family="dense", n_layers=4, d_model=128,
+                      n_heads=4, n_kv_heads=2, d_ff=512, vocab=2048, head_dim=32,
+                      remat="none", optimizer="adamw"),
+    "100m": ArchConfig(name="lm-100m", family="dense", n_layers=10, d_model=640,
+                       n_heads=10, n_kv_heads=5, d_ff=2560, vocab=32000, head_dim=64,
+                       remat="dots", optimizer="adamw"),
+}
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--preset", choices=list(PRESETS), default="cpu")
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = p.parse_args()
+
+    cfg = PRESETS[args.preset]
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", lr=args.lr, total_steps=args.steps,
+                         warmup=max(args.steps // 20, 1))
+    data = SyntheticLM(cfg, DataConfig(seq_len=args.seq, global_batch=args.batch, seed=0))
+    tr = Trainer(model=model, opt=opt, data=data, ckpt_dir=args.ckpt_dir, ckpt_every=100)
+    if not tr.restore():
+        tr.init()
+        print("fresh start")
+    else:
+        print(f"resumed from step {int(tr.state['step'])}")
+    hist = tr.train(args.steps, log_every=25)
+    import numpy as np
+    first = np.mean([h["loss"] for h in hist[:10]])
+    last = np.mean([h["loss"] for h in hist[-10:]])
+    print(f"\nloss {first:.4f} -> {last:.4f} over {len(hist)} steps "
+          f"({'LEARNING' if last < first - 0.1 else 'check hyperparams'})")
+    tr.save()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

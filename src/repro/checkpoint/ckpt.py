@@ -1,0 +1,139 @@
+"""Sharded checkpointing with atomic manifests and reshard-on-restore.
+
+Layout:
+    <dir>/step_000123/
+        MANIFEST.json        # tree structure, shapes, dtypes, step, extras
+        <leaf-path>.bin      # raw little-endian bytes per leaf
+    <dir>/LATEST             # atomic pointer (written last, via os.rename)
+
+Design points for scale:
+  * the manifest is written *after* all leaves and LATEST after the manifest,
+    so a crash mid-save never corrupts the restore path (restart sees the
+    previous complete step);
+  * restore takes an optional ``shardings`` pytree — arrays are device_put
+    with the *new* mesh's NamedShardings, which is the elastic-rescale path
+    (N-chip checkpoint -> M-chip mesh);
+  * bf16 and other ml_dtypes round-trip via raw bytes + dtype strings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "list_steps"]
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extras: dict | None = None) -> str:
+    """Atomically save a pytree for ``step``. Returns the step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_save_")
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "extras": extras or {}, "leaves": {}}
+    try:
+        for name, leaf in leaves:
+            arr = np.asarray(jax.device_get(leaf))
+            fn = name.replace(_SEP, "__") + ".bin"
+            with open(os.path.join(tmp, fn), "wb") as f:
+                f.write(arr.tobytes())
+            manifest["leaves"][name] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.rename(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(os.path.join(ckpt_dir, d, "MANIFEST.json")):
+            out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            name = f.read().strip()
+        if os.path.exists(os.path.join(ckpt_dir, name, "MANIFEST.json")):
+            return int(name.split("_")[1])
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: int | None = None,
+    like: Any | None = None,
+    shardings: Any | None = None,
+) -> tuple[Any, int, dict]:
+    """Restore (tree, step, extras).
+
+    ``like``: a pytree with the target structure (required to rebuild nesting).
+    ``shardings``: optional matching pytree of NamedSharding — arrays are
+    placed onto the new mesh (reshard-on-restore / elastic rescale).
+    """
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+
+    def load_leaf(name: str):
+        meta = manifest["leaves"][name]
+        with open(os.path.join(d, meta["file"]), "rb") as f:
+            buf = f.read()
+        arr = np.frombuffer(buf, dtype=jnp.dtype(meta["dtype"])).reshape(meta["shape"])
+        return arr
+
+    if like is None:
+        # flat dict restore
+        tree = {name: jnp.asarray(load_leaf(name)) for name in manifest["leaves"]}
+        return tree, manifest["step"], manifest["extras"]
+
+    names = [n for n, _ in _flatten_with_paths(like)]
+    missing = [n for n in names if n not in manifest["leaves"]]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]} (+{len(missing)-5 if len(missing)>5 else 0})")
+    flat = [load_leaf(n) for n in names]
+    if shardings is not None:
+        flat_sh = [s for _, s in _flatten_with_paths(shardings)]
+        flat = [jax.device_put(a, s) if s is not None else jnp.asarray(a)
+                for a, s in zip(flat, flat_sh)]
+    else:
+        flat = [jnp.asarray(a) for a in flat]
+    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), flat)
+    return tree, manifest["step"], manifest["extras"]

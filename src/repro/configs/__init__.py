@@ -1,0 +1,6 @@
+from .base import ARCH_IDS, SHAPES, ArchConfig, MoECfg, SSMCfg, ShapeCfg, cells, get_config, reduced_config
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ArchConfig", "MoECfg", "SSMCfg", "ShapeCfg",
+    "cells", "get_config", "reduced_config",
+]

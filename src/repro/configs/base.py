@@ -1,0 +1,237 @@
+"""Architecture configuration system.
+
+One ``ArchConfig`` per assigned architecture lives in ``repro/configs/<id>.py``
+with the exact published dimensions; ``get_config(name)`` loads it, and
+``.reduced()`` derives the CPU-smoke-test variant (same family, tiny dims).
+
+Input shapes are global (assignment spec): every architecture is exercised on
+``train_4k``, ``prefill_32k``, ``decode_32k`` and — for sub-quadratic
+families only — ``long_500k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+__all__ = [
+    "MoECfg",
+    "SSMCfg",
+    "ArchConfig",
+    "ShapeCfg",
+    "SHAPES",
+    "get_config",
+    "ARCH_IDS",
+    "cells",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    min_capacity: int = 4
+    # 'ep': experts sharded over the model axis, tokens all_to_all'd (large E).
+    # 'tp': every chip holds a d_ff shard of every expert (small E, huge d_ff).
+    mode: str = "ep"
+    n_shared_experts: int = 0  # DeepSeek/Kimi-style always-on shared expert(s)
+    router_aux_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 8
+    conv_width: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope: bool = False  # Qwen2-VL multimodal rotary (3 position streams)
+    moe: MoECfg | None = None
+    ssm: SSMCfg | None = None
+    shared_attn_every: int = 0  # zamba2: shared attention block period
+    enc_layers: int = 0  # whisper encoder depth
+    enc_seq: int = 1500  # whisper: fixed encoder frame count (conv stub output)
+    img_tokens: int = 0  # vlm: patch embeddings per sample (stub frontend)
+    tie_embeddings: bool = False
+    # numerics / optimizer
+    dtype: str = "bfloat16"
+    optimizer: str = "adamw"  # adamw | adafactor
+    remat: str = "full"  # full | dots | none
+    microbatches: int = 1
+    # sharding
+    sharding_overrides: dict[str, tuple[str, ...]] = dataclasses.field(default_factory=dict)
+    # dry-run measurement mode: fully unroll layer scans so XLA cost_analysis
+    # counts every layer (while-loop bodies are otherwise counted ONCE)
+    unroll_layers: bool = False
+    attn_chunk: int = 1024  # KV chunk of the flash-style attention scan
+    long_context_ok: bool = False  # may run long_500k (sub-quadratic)
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // max(self.n_heads, 1)
+
+    def padded(self, dim: int, multiple: int) -> int:
+        return ((dim + multiple - 1) // multiple) * multiple
+
+    def vocab_padded(self, model_shards: int = 16) -> int:
+        """Vocab rounded up so the logits dim shards evenly (embedding rows
+        beyond ``vocab`` are zero-initialized and logits are masked)."""
+        return self.padded(self.vocab, max(128, model_shards))
+
+    def heads_padded(self, model_shards: int = 16) -> int:
+        """Q heads padded to a multiple of the TP degree (phi3: 40 -> 48).
+        Padded heads have zero output-projection rows — numerically exact."""
+        if self.n_heads % model_shards == 0 or self.n_heads < model_shards:
+            return self.n_heads
+        return self.padded(self.n_heads, model_shards)
+
+    def supported_shapes(self) -> list[str]:
+        out = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.long_context_ok:
+            out.append("long_500k")
+        return out
+
+    def params_B(self) -> float:
+        """Rough parameter count in billions (for roofline MODEL_FLOPS)."""
+        d, f, L, v = self.d_model, self.d_ff, self.n_layers, self.vocab
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.family == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            conv_dim = d_in + 2 * s.ngroups * s.d_state
+            nheads = d_in // s.headdim
+            blk = d * (2 * d_in + 2 * s.ngroups * s.d_state + nheads) + s.conv_width * conv_dim + d_in * d
+            return (L * blk + 2 * v * d) / 1e9
+        if self.moe is not None:
+            m = self.moe
+            ffn = m.n_experts * 3 * d * m.d_ff_expert + d * m.n_experts
+            ffn += m.n_shared_experts * 3 * d * m.d_ff_expert
+        else:
+            ffn = 3 * d * f
+        blk = attn + ffn
+        if self.family == "hybrid":
+            s = self.ssm
+            d_in = s.expand * d
+            conv_dim = d_in + 2 * s.ngroups * s.d_state
+            nheads = d_in // s.headdim
+            mamba_blk = d * (2 * d_in + 2 * s.ngroups * s.d_state + nheads) + s.conv_width * conv_dim + d_in * d
+            n_attn = L // max(self.shared_attn_every, 1)
+            return (L * mamba_blk + 1 * (attn + 3 * d * f) + 2 * v * d) / 1e9  # one shared block
+        total = L * blk + 2 * v * d
+        if self.family == "encdec":
+            total += self.enc_layers * (attn + 3 * d * f) + L * attn  # cross-attn
+        return total / 1e9
+
+    def active_params_B(self) -> float:
+        """Active parameters per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.params_B()
+        d, L = self.d_model, self.n_layers
+        m = self.moe
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        ffn = (m.top_k + m.n_shared_experts) * 3 * d * m.d_ff_expert + d * m.n_experts
+        return (L * (attn + ffn) + 2 * self.vocab * d) / 1e9
+
+
+ARCH_IDS = [
+    "qwen3-32b",
+    "minitron-8b",
+    "phi3-medium-14b",
+    "codeqwen1.5-7b",
+    "mamba2-2.7b",
+    "zamba2-2.7b",
+    "qwen2-vl-2b",
+    "whisper-tiny",
+    "grok-1-314b",
+    "kimi-k2-1t-a32b",
+]
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[name]}")
+    return mod.CONFIG
+
+
+def reduced_config(cfg: ArchConfig) -> ArchConfig:
+    """Tiny same-family variant for CPU smoke tests."""
+    kw: dict[str, Any] = dict(
+        name=cfg.name + "-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        microbatches=1,
+        enc_layers=min(cfg.enc_layers, 2),
+        enc_seq=16 if cfg.family == "encdec" else cfg.enc_seq,
+        img_tokens=8 if cfg.family == "vlm" else 0,
+        shared_attn_every=2 if cfg.shared_attn_every else 0,
+        remat="none",
+    )
+    if cfg.moe is not None:
+        # capacity_factor high enough that smoke tests never drop tokens
+        # (drop semantics are batch-dependent; tests assert exact
+        # prefill/decode consistency)
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8 if cfg.moe.mode == "ep" else 4, top_k=2,
+            d_ff_expert=32, capacity_factor=4.0,
+        )
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, headdim=8, ngroups=2, chunk=8)
+    return dataclasses.replace(cfg, **kw)
+
+
+def cells(archs: list[str] | None = None) -> list[tuple[str, str]]:
+    """All (arch, shape) cells in the assignment's 40-cell grid."""
+    out = []
+    for a in archs or ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            if s == "long_500k" and not cfg.long_context_ok:
+                continue
+            out.append((a, s))
+    return out

@@ -1,0 +1,381 @@
+"""Collective-communication schedules over an arbitrary interconnect graph.
+
+The paper benchmarks MPI collectives (Bcast / Reduce / Scatter / Alltoall) on
+clusters whose network topology is a regular graph with static shortest-path
+routing.  MPI treats its internal algorithms as a black box; here they are
+explicit: every collective is compiled to a ``Schedule`` — a list of rounds of
+point-to-point ``Transfer``s between *ranks* — and the schedule is then costed
+on a concrete ``Graph`` + ``RoutingTable`` with an α–β link model and per-link
+contention.  This is exactly the mechanism by which topology (MPL, diameter,
+bisection) enters collective performance in the paper, and it is what lets the
+same schedule be *executed* in JAX via ``shard_map`` + ``lax.ppermute``
+(see ``repro.comm.jaxcoll``).
+
+Cost model (paper §4.2 + SimGrid setup of §4.4.2):
+    round_time = max over transfers  (T0 + α·hops(src,dst))        [latency]
+               + max over directed links (bytes crossing / link_bw) [serialization]
+    total = Σ round_time.
+
+The serialization term is where static-routing congestion bites the torus on
+all-to-all (paper's repeated observation); the latency term is where MPL/D
+bite everything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from .graphs import Graph
+from .routing import RoutingTable
+
+__all__ = [
+    "LinkModel",
+    "TAISHAN_LINK",
+    "TPU_ICI_LINK",
+    "Transfer",
+    "Schedule",
+    "CollectiveReport",
+    "simulate",
+    "bcast_binomial",
+    "bcast_flood",
+    "reduce_binomial",
+    "scatter_binomial",
+    "gather_binomial",
+    "allgather_ring",
+    "reduce_scatter_ring",
+    "allreduce_ring",
+    "allreduce_recursive_doubling",
+    "alltoall_pairwise",
+    "alltoall_direct",
+    "ALGORITHMS",
+    "collective_time",
+]
+
+
+# ------------------------------------------------------------------------------
+# Link model
+# ------------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """α–β model of one network link.
+
+    t0     per-message initiation time, seconds (the paper's T0)
+    alpha  per-hop forwarding latency, seconds (the paper's α slope)
+    bw     per-link bandwidth, bytes/second
+    """
+
+    t0: float
+    alpha: float
+    bw: float
+    name: str = "link"
+
+    def p2p_time(self, hops: float, nbytes: float) -> float:
+        """Uncontended point-to-point time for one message."""
+        if hops <= 0:
+            return 0.0
+        return self.t0 + self.alpha * hops + nbytes / self.bw
+
+
+# The paper's own fit on Taishan: T = 107.17 + 121.15 h  (µs, 1 KB messages)
+# over GigE (≈118 MB/s effective).  Used for paper-fidelity benchmarks.
+TAISHAN_LINK = LinkModel(t0=107.17e-6, alpha=121.15e-6, bw=118e6, name="taishan-gige")
+
+# TPU v5e ICI per assignment constants: ~50 GB/s per link; ~1 µs per hop.
+TPU_ICI_LINK = LinkModel(t0=1e-6, alpha=1e-6, bw=50e9, name="tpu-v5e-ici")
+
+
+# ------------------------------------------------------------------------------
+# Schedules
+# ------------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    src: int
+    dst: int
+    nbytes: float
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Rounds of concurrent point-to-point transfers between ranks."""
+
+    name: str
+    n: int
+    rounds: list[list[Transfer]]
+
+    def total_bytes(self) -> float:
+        return sum(t.nbytes for r in self.rounds for t in r)
+
+    def validate(self) -> None:
+        for r in self.rounds:
+            for t in r:
+                if not (0 <= t.src < self.n and 0 <= t.dst < self.n):
+                    raise ValueError(f"{self.name}: transfer {t} out of range n={self.n}")
+                if t.src == t.dst:
+                    raise ValueError(f"{self.name}: self transfer {t}")
+
+
+@dataclasses.dataclass
+class CollectiveReport:
+    schedule: str
+    topology: str
+    time: float
+    latency_time: float
+    serial_time: float
+    rounds: int
+    max_link_bytes: float
+    total_link_bytes: float  # Σ bytes × hops — the "wire work"
+
+    def __repr__(self):  # pragma: no cover
+        return (
+            f"<{self.schedule} on {self.topology}: {self.time*1e6:.1f}us "
+            f"(lat {self.latency_time*1e6:.1f} + ser {self.serial_time*1e6:.1f}), "
+            f"{self.rounds} rounds, max-link {self.max_link_bytes:.0f}B>"
+        )
+
+
+def simulate(schedule: Schedule, rt: RoutingTable, model: LinkModel) -> CollectiveReport:
+    """Cost a schedule on a routed topology with the α–β + contention model."""
+    schedule.validate()
+    lat_total = 0.0
+    ser_total = 0.0
+    max_link = 0.0
+    wire = 0.0
+    for rnd in schedule.rounds:
+        if not rnd:
+            continue
+        lat = 0.0
+        loads: dict[tuple[int, int], float] = {}
+        for t in rnd:
+            h = rt.dist[t.src, t.dst]
+            if not np.isfinite(h):
+                raise ValueError(f"no route {t.src}->{t.dst}")
+            lat = max(lat, model.t0 + model.alpha * float(h))
+            for link in rt.path_links(t.src, t.dst):
+                loads[link] = loads.get(link, 0.0) + t.nbytes
+                wire += t.nbytes
+        ser = max(loads.values()) / model.bw if loads else 0.0
+        max_link = max(max_link, max(loads.values()) if loads else 0.0)
+        lat_total += lat
+        ser_total += ser
+    return CollectiveReport(
+        schedule=schedule.name,
+        topology=rt.graph.name,
+        time=lat_total + ser_total,
+        latency_time=lat_total,
+        serial_time=ser_total,
+        rounds=len(schedule.rounds),
+        max_link_bytes=max_link,
+        total_link_bytes=wire,
+    )
+
+
+# ------------------------------------------------------------------------------
+# MPI-style rank algorithms (MPICH defaults, made explicit)
+# ------------------------------------------------------------------------------
+
+def _vrank(r: int, root: int, n: int) -> int:
+    return (r - root) % n
+
+
+def _rank(v: int, root: int, n: int) -> int:
+    return (v + root) % n
+
+
+def bcast_binomial(n: int, nbytes: float, root: int = 0) -> Schedule:
+    """Binomial-tree broadcast (MPICH default for short/medium messages)."""
+    rounds: list[list[Transfer]] = []
+    mask = 1
+    informed = {0}
+    while mask < n:
+        rnd = []
+        for v in sorted(informed):
+            peer = v | mask
+            if peer < n and peer not in informed:
+                rnd.append(Transfer(_rank(v, root, n), _rank(peer, root, n), nbytes))
+        for t in rnd:
+            informed.add(_vrank(t.dst, root, n))
+        rounds.append(rnd)
+        mask <<= 1
+    return Schedule(f"bcast-binomial[{n}]", n, rounds)
+
+
+def bcast_flood(n: int, nbytes: float, g: Graph, root: int = 0) -> Schedule:
+    """Topology-aware broadcast: BFS flooding along actual graph edges.
+
+    Every round, each informed node forwards to all uninformed neighbours —
+    finishes in eccentricity(root) rounds with only 1-hop transfers.  This is
+    the beyond-paper schedule the JAX runtime uses when the topology is known.
+    """
+    adj = g.adjacency_lists()
+    informed = {root}
+    rounds = []
+    while len(informed) < n:
+        rnd = []
+        newly = set()
+        for u in sorted(informed):
+            for v in adj[u]:
+                if v not in informed and v not in newly:
+                    rnd.append(Transfer(u, v, nbytes))
+                    newly.add(v)
+        if not rnd:
+            raise ValueError("graph disconnected")
+        informed |= newly
+        rounds.append(rnd)
+    return Schedule(f"bcast-flood[{n}]", n, rounds)
+
+
+def reduce_binomial(n: int, nbytes: float, root: int = 0) -> Schedule:
+    """Binomial-tree reduce: exact mirror of the bcast tree (partial sums flow
+    down the same edges in reverse round order, leaves first)."""
+    b = bcast_binomial(n, nbytes, root)
+    rounds = [[Transfer(t.dst, t.src, t.nbytes) for t in rnd] for rnd in reversed(b.rounds)]
+    return Schedule(f"reduce-binomial[{n}]", n, rounds)
+
+
+def scatter_binomial(n: int, nbytes: float, root: int = 0) -> Schedule:
+    """Binomial scatter: root splits, subtree roots forward halves.
+
+    ``nbytes`` is the per-destination chunk; a subtree root receives
+    subtree_size × nbytes in one message.
+    """
+    rounds: list[list[Transfer]] = []
+    mask = n.bit_length() - 1 if (n & (n - 1)) == 0 else n.bit_length()
+    # walk masks high→low so messages carry whole subtrees
+    m = 1 << (mask - 1) if mask else 0
+    holders = {0: n}  # vrank -> number of chunks held
+    while m >= 1:
+        rnd = []
+        new_holders = dict(holders)
+        for v, cnt in holders.items():
+            peer = v | m
+            if peer != v and peer < n and peer not in holders:
+                sub = min(cnt - (peer - v), n - peer) if peer - v < cnt else 0
+                sub = max(sub, 0)
+                if sub > 0:
+                    rnd.append(Transfer(_rank(v, root, n), _rank(peer, root, n), sub * nbytes))
+                    new_holders[peer] = sub
+                    new_holders[v] = cnt - sub
+        holders = new_holders
+        if rnd:
+            rounds.append(rnd)
+        m >>= 1
+    return Schedule(f"scatter-binomial[{n}]", n, rounds)
+
+
+def gather_binomial(n: int, nbytes: float, root: int = 0) -> Schedule:
+    sc = scatter_binomial(n, nbytes, root)
+    rounds = [[Transfer(t.dst, t.src, t.nbytes) for t in rnd] for rnd in reversed(sc.rounds)]
+    return Schedule(f"gather-binomial[{n}]", n, rounds)
+
+
+def allgather_ring(n: int, nbytes: float) -> Schedule:
+    """Ring allgather: n-1 rounds of neighbour exchange (rank space)."""
+    rounds = []
+    for _ in range(n - 1):
+        rounds.append([Transfer(i, (i + 1) % n, nbytes) for i in range(n)])
+    return Schedule(f"allgather-ring[{n}]", n, rounds)
+
+
+def reduce_scatter_ring(n: int, nbytes: float) -> Schedule:
+    """Ring reduce-scatter: n-1 rounds, each rank forwards a partial chunk."""
+    rounds = []
+    for _ in range(n - 1):
+        rounds.append([Transfer(i, (i + 1) % n, nbytes) for i in range(n)])
+    return Schedule(f"reduce-scatter-ring[{n}]", n, rounds)
+
+
+def allreduce_ring(n: int, nbytes: float) -> Schedule:
+    """Ring allreduce = ring reduce-scatter + ring allgather on 1/n chunks."""
+    chunk = nbytes / n
+    rs = reduce_scatter_ring(n, chunk)
+    ag = allgather_ring(n, chunk)
+    return Schedule(f"allreduce-ring[{n}]", n, rs.rounds + ag.rounds)
+
+
+def allreduce_recursive_doubling(n: int, nbytes: float) -> Schedule:
+    """Recursive doubling allreduce (MPICH default for short messages)."""
+    if n & (n - 1):
+        raise ValueError("recursive doubling needs power-of-two n")
+    rounds = []
+    mask = 1
+    while mask < n:
+        rnd = []
+        for i in range(n):
+            rnd.append(Transfer(i, i ^ mask, nbytes))
+        rounds.append(rnd)
+        mask <<= 1
+    return Schedule(f"allreduce-recdbl[{n}]", n, rounds)
+
+
+def alltoall_pairwise(n: int, nbytes: float) -> Schedule:
+    """Pairwise-exchange alltoall (MPICH long-message default).
+
+    Round r (1..n-1): rank i sends its chunk to (i+r) mod n.  ``nbytes`` is
+    the per-pair chunk size (the paper's 'unit message size').
+    """
+    rounds = []
+    for r in range(1, n):
+        rounds.append([Transfer(i, (i + r) % n, nbytes) for i in range(n)])
+    return Schedule(f"alltoall-pairwise[{n}]", n, rounds)
+
+
+def alltoall_direct(n: int, nbytes: float) -> Schedule:
+    """All pairs fire simultaneously in one round — the maximal-contention
+    reference point (what a congested static-routed network degrades to)."""
+    rnd = [Transfer(i, j, nbytes) for i in range(n) for j in range(n) if i != j]
+    return Schedule(f"alltoall-direct[{n}]", n, [rnd])
+
+
+ALGORITHMS: dict[str, Callable[..., Schedule]] = {
+    "bcast": bcast_binomial,
+    "reduce": reduce_binomial,
+    "scatter": scatter_binomial,
+    "gather": gather_binomial,
+    "allgather": allgather_ring,
+    "reduce_scatter": reduce_scatter_ring,
+    "allreduce": allreduce_ring,
+    "allreduce_recdbl": allreduce_recursive_doubling,
+    "alltoall": alltoall_pairwise,
+    "alltoall_direct": alltoall_direct,
+}
+
+
+def collective_time(
+    g: Graph,
+    op: str,
+    nbytes: float,
+    model: LinkModel = TAISHAN_LINK,
+    rt: RoutingTable | None = None,
+    root: int | None = None,
+    **kw,
+) -> CollectiveReport:
+    """Cost collective ``op`` with per-rank payload ``nbytes`` on graph ``g``.
+
+    For rooted collectives (bcast/reduce/scatter/gather) the paper averages
+    over all roots; pass root=None to reproduce that averaging.
+    """
+    rt = rt or RoutingTable.build(g)
+    fn = ALGORITHMS[op]
+    rooted = op in ("bcast", "reduce", "scatter", "gather")
+    if rooted and root is None:
+        reps = [simulate(fn(g.n, nbytes, root=r, **kw), rt, model) for r in range(g.n)]
+        t = float(np.mean([r_.time for r_ in reps]))
+        base = reps[0]
+        return CollectiveReport(
+            schedule=base.schedule + "-rootavg",
+            topology=base.topology,
+            time=t,
+            latency_time=float(np.mean([r_.latency_time for r_ in reps])),
+            serial_time=float(np.mean([r_.serial_time for r_ in reps])),
+            rounds=base.rounds,
+            max_link_bytes=float(np.max([r_.max_link_bytes for r_ in reps])),
+            total_link_bytes=float(np.mean([r_.total_link_bytes for r_ in reps])),
+        )
+    args = {"root": root} if rooted else {}
+    sched = fn(g.n, nbytes, **args, **kw)
+    return simulate(sched, rt, model)

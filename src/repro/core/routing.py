@@ -1,0 +1,103 @@
+"""Static shortest-path routing (paper §3.2: Floyd's algorithm).
+
+The paper routes every node pair over one fixed shortest path computed by
+Floyd–Warshall, which is also where its torus congestion pathology comes
+from — static single-path routing concentrates all-to-all flows on a few
+links.  ``RoutingTable`` reproduces that behaviour: deterministic
+lowest-index tie-breaking, per-pair path extraction, and per-link load
+accounting that the simulator (netsim.py) uses for contention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graphs import Graph
+
+__all__ = ["RoutingTable"]
+
+
+@dataclasses.dataclass
+class RoutingTable:
+    """All-pairs static shortest-path routes for a graph.
+
+    ``dist[u, v]``      hop distance (float, inf if disconnected)
+    ``next_hop[u, v]``  neighbour of u on the fixed route u->v (-1 if none)
+    """
+
+    graph: Graph
+    dist: np.ndarray
+    next_hop: np.ndarray
+
+    @classmethod
+    def build(cls, g: Graph) -> "RoutingTable":
+        n = g.n
+        dist = np.full((n, n), np.inf)
+        nxt = np.full((n, n), -1, dtype=np.int64)
+        np.fill_diagonal(dist, 0.0)
+        for u, v in g.edges:
+            dist[u, v] = dist[v, u] = 1.0
+            nxt[u, v] = v
+            nxt[v, u] = u
+        # Floyd–Warshall, vectorized over (i, j) for each k; strict '<' gives
+        # deterministic lowest-k tie-breaking (the paper's static choice).
+        for k in range(n):
+            alt = dist[:, k, None] + dist[None, k, :]
+            better = alt < dist - 1e-12
+            if better.any():
+                dist = np.where(better, alt, dist)
+                nxt = np.where(better, nxt[:, k, None], nxt)
+        return cls(g, dist, nxt)
+
+    # ------------------------------------------------------------------
+    def path(self, u: int, v: int) -> list[int]:
+        """Vertex sequence of the static route u -> v (inclusive)."""
+        if u == v:
+            return [u]
+        if self.next_hop[u, v] < 0:
+            raise ValueError(f"no route {u}->{v}")
+        out = [u]
+        cur = u
+        while cur != v:
+            cur = int(self.next_hop[cur, v])
+            out.append(cur)
+            if len(out) > self.graph.n + 1:  # pragma: no cover
+                raise RuntimeError("routing loop")
+        return out
+
+    def path_links(self, u: int, v: int) -> list[tuple[int, int]]:
+        """Directed links traversed by the route u -> v."""
+        p = self.path(u, v)
+        return list(zip(p[:-1], p[1:]))
+
+    # ------------------------------------------------------------------
+    def link_loads(self, flows: list[tuple[int, int, float]] | None = None) -> dict[tuple[int, int], float]:
+        """Traffic per *directed* link under static routing.
+
+        ``flows`` is a list of (src, dst, bytes); default = one unit flow per
+        ordered pair (the all-to-all pattern the paper stresses).
+        Returns {(u, v): total_bytes}.
+        """
+        n = self.graph.n
+        if flows is None:
+            flows = [(u, v, 1.0) for u in range(n) for v in range(n) if u != v]
+        loads: dict[tuple[int, int], float] = {}
+        for src, dst, size in flows:
+            if src == dst or size == 0.0:
+                continue
+            for link in self.path_links(src, dst):
+                loads[link] = loads.get(link, 0.0) + size
+        return loads
+
+    def max_congestion(self, flows=None) -> float:
+        loads = self.link_loads(flows)
+        return max(loads.values()) if loads else 0.0
+
+    def mean_hops(self, flows=None) -> float:
+        n = self.graph.n
+        if flows is None:
+            off = ~np.eye(n, dtype=bool)
+            return float(self.dist[off].mean())
+        tot = sum(self.dist[s, d] * 1.0 for s, d, _ in flows)
+        return tot / max(len(flows), 1)

@@ -1,0 +1,103 @@
+"""Deterministic synthetic data pipeline with host sharding and skip-ahead.
+
+Real frameworks checkpoint the *data iterator* alongside the weights so a
+restarted job does not revisit examples.  The synthetic stream here is a
+counter-indexed PRNG: batch ``i`` is a pure function of ``(seed, i)``, so
+skip-ahead after restore is O(1) (set the counter), and every host draws only
+its own shard — no coordination needed, which is exactly the property you
+want at 1000+ nodes.
+
+The token stream is learnable (not iid noise): a vocab-periodic Markov walk
+with noise, so the e2e example's loss visibly falls below the iid entropy
+floor within a few hundred steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch"]
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+
+
+class SyntheticLM:
+    """Deterministic counter-based synthetic LM stream."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig):
+        assert data.global_batch % data.n_hosts == 0
+        self.cfg = cfg
+        self.data = data
+        self.step = 0
+
+    # -- checkpointable state -------------------------------------------------
+    def state(self) -> dict:
+        return {"step": self.step}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])
+
+    # -- generation -----------------------------------------------------------
+    def _tokens(self, rng: np.random.Generator, b: int, s: int) -> np.ndarray:
+        v = self.cfg.vocab
+        # Markov-ish: x[t] = (x[t-1]*a + c) mod v with occasional resets
+        a = 31, 17
+        x = np.empty((b, s + 1), np.int64)
+        x[:, 0] = rng.integers(0, v, size=b)
+        noise = rng.random((b, s))
+        rnd = rng.integers(0, v, size=(b, s))
+        for t in range(1, s + 1):
+            nxt = (x[:, t - 1] * a[0] + a[1]) % v
+            x[:, t] = np.where(noise[:, t - 1] < 0.1, rnd[:, t - 1], nxt)
+        return x
+
+    def batch(self, i: int | None = None) -> dict:
+        """Batch ``i`` (default: internal counter), host-sharded."""
+        d = self.data
+        i = self.step if i is None else i
+        per_host = d.global_batch // d.n_hosts
+        rng = np.random.default_rng(np.random.SeedSequence([d.seed, i, d.host_id]))
+        x = self._tokens(rng, per_host, d.seq_len)
+        out = {
+            "tokens": jnp.asarray(x[:, :-1], jnp.int32),
+            "labels": jnp.asarray(x[:, 1:], jnp.int32),
+        }
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            s_img = cfg.img_tokens
+            out["tokens"] = out["tokens"][:, s_img:]
+            out["labels"] = out["labels"][:, s_img:]
+            out["img_embeds"] = jnp.asarray(
+                rng.normal(size=(per_host, s_img, cfg.d_model)), jnp.bfloat16)
+            s_total = d.seq_len
+            pos = np.broadcast_to(np.arange(s_total, dtype=np.int32)[None, None],
+                                  (3, per_host, s_total))
+            out["positions"] = jnp.asarray(pos)
+        elif cfg.family == "encdec":
+            out["frames"] = jnp.asarray(
+                rng.normal(size=(per_host, cfg.enc_seq, cfg.d_model)), jnp.bfloat16)
+        if i == self.step:
+            self.step += 1
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.batch()
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    """One-shot batch (tests / examples)."""
+    return SyntheticLM(cfg, DataConfig(seq_len=seq, global_batch=batch, seed=seed)).batch(0)

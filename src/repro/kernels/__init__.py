@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots: flash attention (the
+quadratic attention term) and the Mamba2 SSD intra-chunk scan.  ``ops``
+holds the jit'd wrappers; ``ref`` the pure-jnp oracles."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py``.  They share math with the model reference paths
+(``models.attention.attention`` / ``models.ssm.ssd_chunked_ref``) but are
+written in the most direct form possible — no chunking, no fused scans — so a
+kernel bug cannot hide behind a shared implementation detail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "ssd_scan_ref"]
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (b, sq, h, hd)
+    k: jax.Array,  # (b, skv, kv, hd)
+    v: jax.Array,  # (b, skv, kv, hd)
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Naive full-materialization attention with GQA. fp32 softmax."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits *= hd ** -0.5
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(skv)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,   # (b, s, h, p)
+    dt: jax.Array,  # (b, s, h) — positive
+    A: jax.Array,   # (h,) — negative
+    B: jax.Array,   # (b, s, h, n)
+    C: jax.Array,   # (b, s, h, n)
+    init_state: jax.Array | None = None,  # (b, h, p, n)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (lax.scan over time), fp32."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf, Af = B.astype(jnp.float32), C.astype(jnp.float32), A.astype(jnp.float32)
+    H0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(H, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * Af)
+        H = H * decay[..., None, None] + jnp.einsum("bh,bhn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, H)
+        return H, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+    H, ys = jax.lax.scan(step, H0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), H

@@ -1,0 +1,143 @@
+"""Sharding specs for whole train/serve states, derived from logical axes.
+
+Everything the dry-run lowers is ShapeDtypeStruct-only: ``jax.eval_shape``
+gives the shapes, the model's logical-axis trees give the PartitionSpecs, and
+``ShardingRules`` drops any constraint that does not divide (so the same
+specs work on the 8-device test mesh and the 512-chip production mesh).
+
+Optimizer states inherit parameter sharding; Adafactor's factored stats drop
+the factored dimension's axis entry (vr = mean over last dim, vc = mean over
+second-to-last).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeCfg
+from ..models.zoo import Model
+from ..optim.optimizers import _factored_dims
+
+__all__ = [
+    "param_shapes", "param_shardings", "opt_state_shardings", "batch_shardings",
+    "cache_shardings", "train_state_specs", "serve_specs", "named",
+]
+
+
+def named(model: Model, axes: tuple, dims: tuple[int, ...]):
+    if model.rules.mesh is None:
+        return None
+    return NamedSharding(model.rules.mesh, model.rules.spec(*axes, dims=dims))
+
+
+def _tree_shardings(model: Model, shapes_tree, axes_tree):
+    def one(shape_leaf, axes):
+        if axes is None:
+            axes = (None,) * len(shape_leaf.shape)
+        return named(model, tuple(axes), shape_leaf.shape)
+
+    return jax.tree.map(one, shapes_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def param_shapes(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def param_shardings(model: Model, shapes=None):
+    shapes = shapes if shapes is not None else param_shapes(model)
+    axes = model.param_axes()
+
+    def one(shape_leaf, ax):
+        return named(model, tuple(ax), shape_leaf.shape)
+
+    return jax.tree.map(one, shapes, axes,
+                        is_leaf=lambda x: _is_axes(x))
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def opt_state_shardings(model: Model, opt_name: str, pshapes=None):
+    pshapes = pshapes if pshapes is not None else param_shapes(model)
+    paxes = model.param_axes()
+    if opt_name == "adamw":
+        def one(shape_leaf, ax):
+            return named(model, tuple(ax), shape_leaf.shape)
+        t = jax.tree.map(one, pshapes, paxes, is_leaf=_is_axes)
+        return {"m": t, "v": t}
+    if opt_name == "adafactor":
+        def one(shape_leaf, ax):
+            ax = tuple(ax)
+            shp = shape_leaf.shape
+            fd = _factored_dims(shp)
+            if fd is not None and min(shp[fd[0]], shp[fd[1]]) >= 16:
+                r, c = fd
+                vr_ax = ax[:c] + ax[c + 1:]
+                vc_ax = ax[:r] + ax[r + 1:]
+                vr_shape = shp[:c] + shp[c + 1:]
+                vc_shape = shp[:r] + shp[r + 1:]
+                return {"vr": named(model, vr_ax, vr_shape),
+                        "vc": named(model, vc_ax, vc_shape)}
+            return {"v": named(model, ax, shp)}
+        return {"stats": jax.tree.map(one, pshapes, paxes, is_leaf=_is_axes)}
+    raise ValueError(opt_name)
+
+
+def batch_shardings(model: Model, specs: dict):
+    out = {}
+    for k, v in specs.items():
+        if k == "positions" and len(v.shape) == 3 and v.shape[0] == 3:
+            out[k] = named(model, (None, "batch", "seq"), v.shape)
+        elif k in ("img_embeds", "frames"):
+            out[k] = named(model, ("batch", "seq", "embed"), v.shape)
+        else:
+            out[k] = named(model, ("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+    return out
+
+
+def cache_shardings(model: Model, cache_shapes):
+    axes = model.cache_axes()
+
+    def one(shape_leaf, ax):
+        ax = tuple(ax) if ax else (None,) * len(shape_leaf.shape)
+        if len(ax) != len(shape_leaf.shape):
+            ax = (None,) * len(shape_leaf.shape)
+        return named(model, ax, shape_leaf.shape)
+
+    return jax.tree.map(one, cache_shapes, axes, is_leaf=_is_axes)
+
+
+# ------------------------------------------------------------------------------
+# Whole-step spec bundles
+# ------------------------------------------------------------------------------
+
+def train_state_specs(model: Model, opt, opt_name: str):
+    """(state_shapes, state_shardings) for {'params', 'opt_state', 'step'}."""
+    pshapes = param_shapes(model)
+    oshapes = jax.eval_shape(opt.init, pshapes)
+    shapes = {"params": pshapes, "opt_state": oshapes,
+              "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    shard = {"params": param_shardings(model, pshapes),
+             "opt_state": opt_state_shardings(model, opt_name, pshapes),
+             "step": named(model, (), ())}
+    return shapes, shard
+
+
+def serve_specs(model: Model, shape: ShapeCfg):
+    """Shapes+shardings for decode: (params, tokens, cache)."""
+    pshapes = param_shapes(model)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    shapes = (pshapes, tok, cache_shapes)
+    shard = (param_shardings(model, pshapes),
+             named(model, ("batch", None), tok.shape),
+             cache_shardings(model, cache_shapes))
+    return shapes, shard

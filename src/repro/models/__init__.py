@@ -1,0 +1,4 @@
+from .sharding import ShardingRules, make_rules
+from .zoo import Model, build_model
+
+__all__ = ["ShardingRules", "make_rules", "Model", "build_model"]

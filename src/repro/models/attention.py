@@ -1,0 +1,152 @@
+"""Attention: chunked (flash-style) training/prefill path and a grouped-einsum
+decode path over a sequence-sharded KV cache.
+
+Why two paths:
+  * train/prefill: seq is long (up to 32k) and *unsharded*; heads are
+    TP-sharded.  Materializing (b, h, s, s) logits is impossible, so we scan
+    over KV chunks with an online-softmax carry — mathematically identical to
+    FlashAttention and the oracle for the Pallas kernel in
+    ``repro.kernels.flash_attention``.
+  * decode: one query token against a KV cache whose *sequence* dim is
+    sharded over the model axis (GQA KV heads — 8..12 — cannot shard over a
+    16-way axis; the sequence can).  A grouped einsum avoids repeating KV to
+    full heads, and XLA inserts the max/sum all-reduces for the softmax over
+    the sharded axis automatically.
+
+Numerics: logits and softmax statistics in fp32, outputs in the activation
+dtype (bf16).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import ShardingRules
+
+__all__ = ["attention", "decode_attention", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(b, s, kv, hd) -> (b, s, kv*n_rep, hd)."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(b, s, kv * n_rep, hd)
+
+
+def attention(
+    q: jax.Array,  # (b, sq, h, hd)
+    k: jax.Array,  # (b, skv, kv, hd)
+    v: jax.Array,  # (b, skv, kv, hd)
+    rules: ShardingRules,
+    causal: bool = True,
+    chunk: int = 1024,
+    q_offset: int = 0,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Chunked multi-head attention. Returns (b, sq, h, hd).
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill
+    continuation); causal masking uses absolute positions.
+    ``use_pallas`` dispatches to the TPU kernel (interpret-mode on CPU).
+    """
+    if use_pallas:
+        from ..kernels import ops as kops
+
+        return kops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    n_rep = h // kvh
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = hd ** -0.5
+
+    chunk = min(chunk, skv)
+    skv_valid = skv
+    pad = (-skv) % chunk
+    if pad:  # pad KV to a chunk multiple; padded slots are masked below
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        skv = k.shape[1]
+    n_chunks = skv // chunk
+
+    # keep q/k/v in bf16 and accumulate in fp32 via preferred_element_type —
+    # the MXU-native pattern; avoids materializing fp32 copies of the (huge)
+    # K/V streams (a large share of the memory roofline term)
+    qf = q.transpose(0, 2, 1, 3)  # (b, h, sq, hd)
+    kc = k.transpose(0, 2, 1, 3).reshape(b, h, n_chunks, chunk, hd)
+    vc = v.transpose(0, 2, 1, 3).reshape(b, h, n_chunks, chunk, hd)
+    kc = jnp.moveaxis(kc, 2, 0)  # (n_chunks, b, h, chunk, hd)
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        acc, m, l = carry  # (b,h,sq,hd), (b,h,sq), (b,h,sq)
+        kcb, vcb, idx = inp
+        logits = jnp.einsum("bhqd,bhcd->bhqc", qf, kcb,
+                            preferred_element_type=jnp.float32) * scale
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        if causal:
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        if pad:
+            logits = jnp.where((kv_pos < skv_valid)[None, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        # PV: keep p in fp32 — in the chunked TRAIN path the (sq, chunk)
+        # probability tile is ~sq/hd times larger than the V chunk, so casting
+        # p costs more traffic than upcasting V saves (measured: +1.3 s
+        # memory term; see EXPERIMENTS.md §Perf qwen3_dots_bf16acc).  The
+        # decode path is the opposite regime and keeps bf16 probabilities.
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p, vcb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3).astype(q.dtype)  # (b, sq, h, hd)
+    return rules.shard(out, "batch", "seq", "heads", "head_dim")
+
+
+def decode_attention(
+    q: jax.Array,       # (b, 1, h, hd)
+    k_cache: jax.Array, # (b, kv, S, hd) — S sharded over 'kv_seq'
+    v_cache: jax.Array, # (b, kv, S, hd)
+    length_mask: jax.Array,  # (b, S) bool: True where cache slot is valid
+    rules: ShardingRules,
+) -> jax.Array:
+    """Single-token attention against a sequence-sharded KV cache.
+
+    Grouped formulation: q reshaped to (b, kv, group, hd); contractions keep
+    the (huge) cache un-repeated.  Softmax reductions over the sharded S dim
+    lower to all-reduce(max)/all-reduce(sum) under pjit.
+    """
+    b, sq, h, hd = q.shape
+    assert sq == 1
+    kvh = k_cache.shape[1]
+    g = h // kvh
+    scale = hd ** -0.5
+    qg = q[:, 0].reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(length_mask[:, None, None, :], logits, NEG_INF)
+    logits = rules.shard(logits, "batch", "kv_heads", None, "kv_seq")
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksd->bkgd",
+                     (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

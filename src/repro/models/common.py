@@ -1,0 +1,154 @@
+"""Shared model components: norms, rotary embeddings (incl. M-RoPE), MLPs,
+embeddings, losses, initializers.
+
+All parameters are plain dict pytrees of jnp arrays; layers are pure
+functions ``f(params, x, ...)``.  Stacked-layer weights carry a leading
+``L`` dim and are consumed by ``lax.scan`` (HLO size O(1) in depth — this is
+what lets 64-layer / 1T-param graphs compile with 512 host devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import ShardingRules
+
+__all__ = [
+    "scan_layers",
+    "Initializer",
+    "rms_norm",
+    "rope_frequencies",
+    "apply_rope",
+    "swiglu",
+    "cross_entropy_loss",
+    "DTYPES",
+]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+def scan_layers(cfg, body, init, xs):
+    """lax.scan over stacked layers; fully unrolled in dry-run measurement
+    mode (cfg.unroll_layers) so XLA cost_analysis counts every layer."""
+    return jax.lax.scan(body, init, xs, unroll=True if cfg.unroll_layers else 1)
+
+
+class Initializer:
+    """Deterministic param initializer with per-path key folding."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+        self._n = 0
+
+    def _next(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+    def normal(self, shape: Sequence[int], stddev: float | None = None) -> jax.Array:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = stddev if stddev is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(self._next(), tuple(shape), jnp.float32) * std).astype(self.dtype)
+
+    def zeros(self, shape: Sequence[int]) -> jax.Array:
+        return jnp.zeros(tuple(shape), self.dtype)
+
+    def ones(self, shape: Sequence[int]) -> jax.Array:
+        return jnp.ones(tuple(shape), self.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+# ------------------------------------------------------------------------------
+# Rotary position embeddings (standard + Qwen2-VL M-RoPE)
+# ------------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim/2,), float32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    mrope_sections: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Rotate ``x`` (..., s, h, hd) by ``positions``.
+
+    positions: (b, s) int32 — or (3, b, s) for M-RoPE, where the three streams
+    are (temporal, height, width) and ``mrope_sections`` splits the half-dim.
+    Decode callers pass s=1 with the absolute position.
+    """
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)  # (hd/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (b, s, hd/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, b, s) positions"
+        parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            a = positions[i][..., None].astype(jnp.float32) * inv[start : start + sec]
+            parts.append(a)
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (b, s, hd/2)
+    sin = jnp.sin(ang)[:, :, None, :]  # (b, s, 1, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------------
+# MLP
+# ------------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array, rules: ShardingRules) -> jax.Array:
+    """SwiGLU MLP: (x@w1 · silu(x@w3)) @ w2, with ff-dim TP sharding.
+
+    The output constraint uses 'seq_sp' so that, under sequence parallelism,
+    the ff-contraction partial sum lowers to reduce-scatter."""
+    h = jnp.einsum("bsd,df->bsf", x, w1)
+    g = jnp.einsum("bsd,df->bsf", x, w3)
+    h = rules.shard(h * jax.nn.silu(g), "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, w2)
+    return rules.shard(out, "batch", "seq_sp", "embed")
+
+
+# ------------------------------------------------------------------------------
+# Loss
+# ------------------------------------------------------------------------------
+
+def cross_entropy_loss(
+    logits: jax.Array,  # (b, s, Vp) — padded vocab
+    labels: jax.Array,  # (b, s) int32
+    vocab: int,
+    z_loss: float = 1e-4,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Next-token CE with padded-vocab masking and z-loss, fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad > vocab:
+        mask = (jnp.arange(vpad) < vocab)[None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss * jnp.square(lse)
+    loss = jnp.mean(nll + zl)
+    return loss, {
+        "loss": loss,
+        "nll": jnp.mean(nll),
+        "z_loss": jnp.mean(zl),
+        "accuracy": jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32)),
+    }

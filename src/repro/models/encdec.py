@@ -1,0 +1,215 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio (conv/mel) frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (b, enc_seq, d) directly.  The encoder
+is bidirectional self-attention; the decoder is causal self-attention +
+cross-attention into the encoder output.  Positions use RoPE (hardware
+adaptation of whisper's sinusoidal embeddings; noted in DESIGN.md).
+
+Decode: self-attn KV cache grows; cross-attn KV is computed once from the
+encoder output at prefill and stays fixed (enc_seq=1500 is small and not
+16-divisible, so the rules drop its sharding and it replicates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attention, decode_attention
+from .common import Initializer, cross_entropy_loss, rms_norm, scan_layers, swiglu
+from .sharding import ShardingRules
+from .transformer import (_attn_params, _mlp_params, _qkv, attn_block,
+                          attn_block_decode, padded_dims)
+
+__all__ = [
+    "init_encdec", "encdec_param_axes", "encdec_train_logits", "encdec_loss",
+    "encdec_init_cache", "encdec_cache_axes", "encdec_prefill", "encdec_decode_step",
+]
+
+
+def init_encdec(cfg: ArchConfig, key: jax.Array) -> dict:
+    hp, kvp, vp = padded_dims(cfg)
+    hd = cfg.resolved_head_dim
+    d, f = cfg.d_model, cfg.d_ff
+    Le, Ld = cfg.enc_layers, cfg.n_layers
+    ini = Initializer(key, dtype=jnp.dtype(cfg.dtype))
+    return {
+        "embed": ini.normal((vp, d), stddev=1.0),
+        "enc_blocks": {
+            "attn": _attn_params(ini, Le, d, hp, kvp, hd, cfg.qk_norm),
+            "mlp": _mlp_params(ini, Le, d, f),
+            "ln1": ini.ones((Le, d)),
+            "ln2": ini.ones((Le, d)),
+        },
+        "enc_norm": ini.ones((d,)),
+        "dec_blocks": {
+            "attn": _attn_params(ini, Ld, d, hp, kvp, hd, cfg.qk_norm),
+            "cross": _attn_params(ini, Ld, d, hp, kvp, hd, cfg.qk_norm),
+            "mlp": _mlp_params(ini, Ld, d, f),
+            "ln1": ini.ones((Ld, d)),
+            "ln2": ini.ones((Ld, d)),
+            "ln3": ini.ones((Ld, d)),
+        },
+        "final_norm": ini.ones((d,)),
+        "head": ini.normal((d, vp)),
+    }
+
+
+def encdec_param_axes(cfg: ArchConfig) -> dict:
+    attn = {
+        "wq": (None, "w_embed", "w_heads", None),
+        "wk": (None, "w_embed", "w_kv_heads", None),
+        "wv": (None, "w_embed", "w_kv_heads", None),
+        "wo": (None, "w_heads", None, "w_embed"),
+    }
+    mlp = {"w1": (None, "w_embed", "w_ff"), "w3": (None, "w_embed", "w_ff"),
+           "w2": (None, "w_ff", "w_embed")}
+    return {
+        "embed": ("w_vocab", "w_embed"),
+        "enc_blocks": {"attn": dict(attn), "mlp": dict(mlp), "ln1": (None, None), "ln2": (None, None)},
+        "enc_norm": (None,),
+        "dec_blocks": {"attn": dict(attn), "cross": dict(attn), "mlp": dict(mlp),
+                       "ln1": (None, None), "ln2": (None, None), "ln3": (None, None)},
+        "final_norm": (None,),
+        "head": ("w_embed", "w_vocab"),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ArchConfig, rules: ShardingRules,
+           use_pallas=False) -> jax.Array:
+    x = rules.shard(frames.astype(jnp.dtype(cfg.dtype)), "batch", "seq", "embed")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, lp):
+        h, _ = attn_block(lp["attn"], rms_norm(xc, lp["ln1"]), positions, cfg, rules,
+                          causal=False, use_pallas=use_pallas)
+        xc = xc + h
+        xc = xc + swiglu(rms_norm(xc, lp["ln2"]), lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"], rules)
+        return xc, None
+
+    x, _ = scan_layers(cfg, body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def _cross_kv(p: dict, enc_out: jax.Array, cfg: ArchConfig):
+    """Cross-attention K/V from encoder output: (b, enc_seq, kvp, hd) each."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def _cross_attend(p: dict, x, k, v, cfg, rules, use_pallas=False):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # no RoPE on cross-attention
+    o = attention(q, k, v, rules, causal=False, use_pallas=use_pallas,
+                  chunk=min(512, k.shape[1]) if k.shape[1] % 512 == 0 else k.shape[1])
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _dec_layer(lp, xc, positions, enc_k, enc_v, cfg, rules, use_pallas=False):
+    h, kv = attn_block(lp["attn"], rms_norm(xc, lp["ln1"]), positions, cfg, rules,
+                       causal=True, use_pallas=use_pallas)
+    xc = xc + h
+    xc = xc + _cross_attend(lp["cross"], rms_norm(xc, lp["ln2"]), enc_k, enc_v, cfg, rules, use_pallas)
+    xc = xc + swiglu(rms_norm(xc, lp["ln3"]), lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"], rules)
+    return xc, kv
+
+
+def encdec_train_logits(params, batch, cfg, rules, use_pallas=False):
+    enc_out = encode(params, batch["frames"], cfg, rules, use_pallas)
+    x = params["embed"][batch["tokens"]]
+    x = rules.shard(x, "batch", "seq", "embed")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, lp):
+        enc_k, enc_v = _cross_kv(lp["cross"], enc_out, cfg)
+        out, _ = _dec_layer(lp, xc, positions, enc_k, enc_v, cfg, rules, use_pallas)
+        return out, None
+
+    remat = (lambda f: f) if cfg.remat == "none" else jax.checkpoint
+    x, _ = scan_layers(cfg, remat(body), x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return rules.shard(logits, "batch", "seq", "vocab")
+
+
+def encdec_loss(params, batch, cfg, rules, use_pallas=False):
+    return cross_entropy_loss(encdec_train_logits(params, batch, cfg, rules, use_pallas),
+                              batch["labels"], cfg.vocab)
+
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    _, kvp, _ = padded_dims(cfg)
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, kvp, max_seq, hd), dtype),
+        "v": jnp.zeros((L, batch, kvp, max_seq, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, kvp, cfg.enc_seq, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, kvp, cfg.enc_seq, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_cache_axes() -> dict:
+    return {
+        "k": (None, "batch", "kv_heads", "kv_seq", None),
+        "v": (None, "batch", "kv_heads", "kv_seq", None),
+        "cross_k": (None, "batch", "kv_heads", None, None),
+        "cross_v": (None, "batch", "kv_heads", None, None),
+        "index": (),
+    }
+
+
+def encdec_prefill(params, batch, cfg, rules, max_seq: int, use_pallas=False):
+    enc_out = encode(params, batch["frames"], cfg, rules, use_pallas)
+    x = params["embed"][batch["tokens"]]
+    x = rules.shard(x, "batch", "seq", "embed")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, lp):
+        enc_k, enc_v = _cross_kv(lp["cross"], enc_out, cfg)
+        out, (k, v) = _dec_layer(lp, xc, positions, enc_k, enc_v, cfg, rules, use_pallas)
+        return out, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                     enc_k.transpose(0, 2, 1, 3), enc_v.transpose(0, 2, 1, 3))
+
+    x, (ks, vs, cks, cvs) = scan_layers(cfg, body, x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+    cache = encdec_init_cache(cfg, b, max_seq, dtype=ks.dtype)
+    pad = max_seq - s
+    if pad:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cache.update(k=ks, v=vs, cross_k=cks, cross_v=cvs, index=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def encdec_decode_step(params, tokens, cache, cfg, rules):
+    x = params["embed"][tokens]
+    x = rules.shard(x, "batch", "seq", "embed")
+    b = x.shape[0]
+    idx = cache["index"]
+    position = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+
+    def body(xc, inp):
+        lp, kc, vc, ck, cv = inp
+        h, nk, nv = attn_block_decode(lp["attn"], rms_norm(xc, lp["ln1"]),
+                                      position, idx, kc, vc, cfg, rules)
+        xc = xc + h
+        # cross attention against the fixed encoder KV
+        q = jnp.einsum("bsd,dhk->bshk", rms_norm(xc, lp["ln2"]), lp["cross"]["wq"])
+        mask = jnp.ones((b, ck.shape[2]), bool)
+        o = decode_attention(q, ck, cv, mask, rules)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, lp["cross"]["wo"])
+        xc = xc + swiglu(rms_norm(xc, lp["ln3"]), lp["mlp"]["w1"], lp["mlp"]["w3"], lp["mlp"]["w2"], rules)
+        return xc, (nk, nv)
+
+    x, (nks, nvs) = scan_layers(
+        cfg, body, x, (params["dec_blocks"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return rules.shard(logits, "batch", "seq", "vocab"), dict(cache, k=nks, v=nvs, index=idx + 1)

@@ -1,0 +1,216 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared attention block
+applied every ``shared_attn_every`` layers (weights reused at each
+application — the parameter-efficiency trick of Zamba).
+
+Layer layout for 54 layers, period 6 (9 stages):
+    [6 x mamba] -> shared-attn -> [6 x mamba] -> shared-attn -> ...
+
+Decode state: per-layer SSM/conv states plus one KV cache per shared-block
+*invocation* (9 of them) — each invocation sees a different depth, so caches
+are distinct even though weights are shared.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import Initializer, cross_entropy_loss, rms_norm, scan_layers, swiglu
+from .sharding import ShardingRules
+from .ssm import (init_mamba_blocks, init_ssm_state, mamba_block, mamba_decode_step,
+                  mamba_logical_axes, ssm_state_logical_axes)
+from .transformer import (_attn_params, _mlp_params, attn_block, attn_block_decode,
+                          padded_dims)
+
+__all__ = [
+    "init_hybrid", "hybrid_param_axes", "hybrid_train_logits", "hybrid_loss",
+    "hybrid_init_cache", "hybrid_cache_axes", "hybrid_prefill", "hybrid_decode_step",
+]
+
+
+def _stages(cfg: ArchConfig) -> tuple[int, int]:
+    period = cfg.shared_attn_every
+    assert cfg.n_layers % period == 0
+    return cfg.n_layers // period, period
+
+
+def init_hybrid(cfg: ArchConfig, key: jax.Array) -> dict:
+    hp, kvp, vp = padded_dims(cfg)
+    hd = cfg.resolved_head_dim
+    d, f = cfg.d_model, cfg.d_ff
+    ini = Initializer(key, dtype=jnp.dtype(cfg.dtype))
+    return {
+        "embed": ini.normal((vp, d), stddev=1.0),
+        "mamba": init_mamba_blocks(ini, cfg.n_layers, cfg),
+        "shared": {
+            "attn": jax.tree.map(lambda a: a[0], _attn_params(ini, 1, d, hp, kvp, hd, cfg.qk_norm)),
+            "mlp": jax.tree.map(lambda a: a[0], _mlp_params(ini, 1, d, f)),
+            "ln1": ini.ones((d,)),
+            "ln2": ini.ones((d,)),
+        },
+        "final_norm": ini.ones((d,)),
+        "head": ini.normal((d, vp)),
+    }
+
+
+def hybrid_param_axes(cfg: ArchConfig) -> dict:
+    attn = {
+        "wq": ("w_embed", "w_heads", None),
+        "wk": ("w_embed", "w_kv_heads", None),
+        "wv": ("w_embed", "w_kv_heads", None),
+        "wo": ("w_heads", None, "w_embed"),
+    }
+    return {
+        "embed": ("w_vocab", "w_embed"),
+        "mamba": mamba_logical_axes(),
+        "shared": {
+            "attn": attn,
+            "mlp": {"w1": ("w_embed", "w_ff"), "w3": ("w_embed", "w_ff"), "w2": ("w_ff", "w_embed")},
+            "ln1": (None,),
+            "ln2": (None,),
+        },
+        "final_norm": (None,),
+        "head": ("w_embed", "w_vocab"),
+    }
+
+
+def _shared_block(p: dict, x, positions, cfg, rules, use_pallas=False):
+    h, kv = attn_block(p["attn"], rms_norm(x, p["ln1"]), positions, cfg, rules, use_pallas=use_pallas)
+    x = x + h
+    x = x + swiglu(rms_norm(x, p["ln2"]), p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"], rules)
+    return x, kv
+
+
+def _reshape_stage(tree, n_stage: int, period: int):
+    return jax.tree.map(lambda a: a.reshape(n_stage, period, *a.shape[1:]), tree)
+
+
+def hybrid_forward(params, batch, cfg: ArchConfig, rules: ShardingRules,
+                   use_pallas=False, collect_kv=False):
+    """Full-sequence forward. Returns (x, per-stage shared-block (k, v) or None)."""
+    n_stage, period = _stages(cfg)
+    x = params["embed"][batch["tokens"]]
+    x = rules.shard(x, "batch", "seq", "embed")
+    b, seq = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (b, seq))
+    mamba_staged = _reshape_stage(params["mamba"], n_stage, period)
+
+    def mamba_body(xc, lp):
+        out, _, _ = mamba_block(lp, xc, cfg, rules, use_pallas=use_pallas)
+        return out, None
+
+    def stage_body(xc, stage_params):
+        xc, _ = scan_layers(cfg, mamba_body, xc, stage_params)
+        xc, kv = _shared_block(params["shared"], xc, positions, cfg, rules, use_pallas)
+        return xc, kv if collect_kv else None
+
+    remat = (lambda f: f) if cfg.remat == "none" else jax.checkpoint
+    x, kvs = scan_layers(cfg, remat(stage_body), x, mamba_staged)
+    return x, kvs
+
+
+def hybrid_train_logits(params, batch, cfg, rules, use_pallas=False):
+    x, _ = hybrid_forward(params, batch, cfg, rules, use_pallas)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return rules.shard(logits, "batch", "seq", "vocab")
+
+
+def hybrid_loss(params, batch, cfg, rules, use_pallas=False):
+    return cross_entropy_loss(hybrid_train_logits(params, batch, cfg, rules, use_pallas),
+                              batch["labels"], cfg.vocab)
+
+
+def hybrid_init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    n_stage, _ = _stages(cfg)
+    _, kvp, _ = padded_dims(cfg)
+    hd = cfg.resolved_head_dim
+    state = init_ssm_state(cfg, cfg.n_layers, batch)
+    return {
+        **state,
+        "k": jnp.zeros((n_stage, batch, kvp, max_seq, hd), dtype),
+        "v": jnp.zeros((n_stage, batch, kvp, max_seq, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def hybrid_cache_axes() -> dict:
+    return {
+        **ssm_state_logical_axes(),
+        "k": (None, "batch", "kv_heads", "kv_seq", None),
+        "v": (None, "batch", "kv_heads", "kv_seq", None),
+        "index": (),
+    }
+
+
+def hybrid_prefill(params, batch, cfg, rules, max_seq: int, use_pallas=False):
+    """Prefill is a full forward that also records SSM states and shared KV."""
+    n_stage, period = _stages(cfg)
+    x = params["embed"][batch["tokens"]]
+    x = rules.shard(x, "batch", "seq", "embed")
+    b, seq = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (b, seq))
+    mamba_staged = _reshape_stage(params["mamba"], n_stage, period)
+
+    def mamba_body(xc, lp):
+        out, st, cv = mamba_block(lp, xc, cfg, rules, use_pallas=use_pallas)
+        return out, (st, cv)
+
+    def stage_body(xc, stage_params):
+        xc, (sts, cvs) = scan_layers(cfg, mamba_body, xc, stage_params)
+        xc, (k, v) = _shared_block(params["shared"], xc, positions, cfg, rules, use_pallas)
+        return xc, (sts, cvs, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    x, (sts, cvs, ks, vs) = scan_layers(cfg, stage_body, x, mamba_staged)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+    cache = hybrid_init_cache(cfg, b, max_seq, dtype=ks.dtype)
+    cache["ssm"] = sts.reshape(cfg.n_layers, *sts.shape[2:])
+    cache["conv"] = cvs.reshape(cfg.n_layers, *cvs.shape[2:]).astype(cache["conv"].dtype)
+    pad = max_seq - seq
+    if pad:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cache["k"], cache["v"] = ks, vs
+    cache["index"] = jnp.asarray(seq, jnp.int32)
+    return logits, cache
+
+
+def hybrid_decode_step(params, tokens, cache, cfg, rules):
+    n_stage, period = _stages(cfg)
+    x = params["embed"][tokens]
+    x = rules.shard(x, "batch", "seq", "embed")
+    b = x.shape[0]
+    idx = cache["index"]
+    position = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    mamba_staged = _reshape_stage(params["mamba"], n_stage, period)
+    ssm_staged = cache["ssm"].reshape(n_stage, period, *cache["ssm"].shape[1:])
+    conv_staged = cache["conv"].reshape(n_stage, period, *cache["conv"].shape[1:])
+
+    def mamba_body(xc, inp):
+        lp, st, cv = inp
+        out, st2, cv2 = mamba_decode_step(lp, xc, st, cv, cfg, rules)
+        return out, (st2, cv2)
+
+    def stage_body(xc, inp):
+        lp, st, cv, kc, vc = inp
+        xc, (st2, cv2) = scan_layers(cfg, mamba_body, xc, (lp, st, cv))
+        h, nk, nv = attn_block_decode(params["shared"]["attn"],
+                                      rms_norm(xc, params["shared"]["ln1"]),
+                                      position, idx, kc, vc, cfg, rules)
+        xc = xc + h
+        mlp = params["shared"]["mlp"]
+        xc = xc + swiglu(rms_norm(xc, params["shared"]["ln2"]), mlp["w1"], mlp["w3"], mlp["w2"], rules)
+        return xc, (st2, cv2, nk, nv)
+
+    x, (sts, cvs, nks, nvs) = scan_layers(
+        cfg, stage_body, x, (mamba_staged, ssm_staged, conv_staged, cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    new_cache = dict(
+        cache,
+        ssm=sts.reshape(cfg.n_layers, *sts.shape[2:]),
+        conv=cvs.reshape(cfg.n_layers, *cvs.shape[2:]),
+        k=nks, v=nvs, index=idx + 1,
+    )
+    return rules.shard(logits, "batch", "seq", "vocab"), new_cache

@@ -1,0 +1,127 @@
+"""Logical-axis sharding rules (MaxText-style), the glue between model code
+and the production mesh.
+
+Model code annotates tensors with *logical* dimension names
+(``shard(x, "batch", "seq", "embed")``); a ``ShardingRules`` object maps each
+name to zero or more *mesh* axes and silently drops constraints that do not
+divide the dimension (e.g. whisper-tiny's 6 heads on a 16-way model axis).
+
+This keeps every model definition mesh-agnostic: the same code runs on 1 CPU
+device (rules with mesh=None are a no-op), on the 8-device test mesh, and on
+the (2, 16, 16) production mesh.  Per-arch overrides come from
+``ArchConfig.sharding_overrides``.
+
+The beyond-paper topology lever (core/layout.py) plugs in here: the device
+permutation chosen by the MPL/QAP optimizer is applied when the mesh is
+constructed (launch/mesh.py), so these logical rules never need to know.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "make_rules"]
+
+# logical name -> preferred mesh axes (filtered against the actual mesh)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),
+    # sequence parallelism (Megatron-SP): the residual stream between blocks
+    # shards its seq dim over 'model', turning per-layer activation
+    # all-reduces into reduce-scatter + all-gather (half the wire bytes).
+    # Off by default; enabled per-arch/per-cell via sharding_overrides.
+    "seq_sp": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": (),
+    "head_dim": (),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "kv_seq": ("model",),  # decode: KV cache sequence dim
+    "expert": ("model",),  # ep-mode MoE
+    "ssm_heads": ("model",),
+    "state": (),
+    # weights
+    "w_embed": ("data",),  # FSDP dim of every weight
+    "w_vocab": ("model",),
+    "w_heads": ("model",),
+    "w_kv_heads": (),
+    "w_ff": ("model",),
+    "w_expert": ("model",),
+    # expert weight inner dims: train default is FSDP on d_model ('w_exp_in');
+    # decode cells flip to fe-sharding ('w_exp_fe' -> data) for
+    # weight-stationary MoE (no per-step expert gathers)
+    "w_exp_in": ("data",),
+    "w_exp_fe": (),
+    "w_ssm_heads": ("model",),
+    "w_conv": (),
+    "w_none": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh | None
+    rules: dict[str, tuple[str, ...]]
+
+    # ------------------------------------------------------------------
+    def axes_for(self, name: str | None) -> tuple[str, ...]:
+        if name is None or self.mesh is None:
+            return ()
+        axes = self.rules.get(name, ())
+        return tuple(a for a in axes if a in self.mesh.axis_names)
+
+    def _axis_size(self, axes: tuple[str, ...]) -> int:
+        s = 1
+        for a in axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    def spec(self, *names: str | None, dims: tuple[int, ...] | None = None) -> P:
+        """PartitionSpec for logical dim names; constraints that don't divide
+        the corresponding dim (when ``dims`` given) are dropped."""
+        entries: list[Any] = []
+        for i, nm in enumerate(names):
+            axes = self.axes_for(nm)
+            if dims is not None and axes:
+                if dims[i] % self._axis_size(axes) != 0:
+                    axes = ()
+            if not axes:
+                entries.append(None)
+            elif len(axes) == 1:
+                entries.append(axes[0])
+            else:
+                entries.append(tuple(axes))
+        return P(*entries)
+
+    def sharding(self, *names: str | None, dims: tuple[int, ...] | None = None):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*names, dims=dims))
+
+    def shard(self, x: jax.Array, *names: str | None):
+        """Apply a sharding constraint inside jit; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        if len(names) != x.ndim:
+            raise ValueError(f"{len(names)} names for rank-{x.ndim} tensor")
+        sh = self.sharding(*names, dims=x.shape)
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    # ------------------------------------------------------------------
+    def data_shards(self) -> int:
+        return self._axis_size(self.axes_for("batch")) if self.mesh else 1
+
+    def model_shards(self) -> int:
+        return self._axis_size(self.axes_for("heads")) if self.mesh else 1
+
+
+def make_rules(mesh: Mesh | None, overrides: dict[str, tuple[str, ...]] | None = None) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return ShardingRules(mesh=mesh, rules=rules)

@@ -1,0 +1,262 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked parallel scan for
+train/prefill and an O(1)-state recurrent step for decode.
+
+SSD recurrence (per head h, headdim p, state n):
+    H_t = exp(dt_t · A) · H_{t-1} + dt_t · B_t ⊗ x_t        H ∈ R^{p×n}
+    y_t = C_t · H_t + D · x_t
+
+Chunked evaluation (Dao & Gu 2024, "SSD"): split the sequence into chunks of
+length Q; within a chunk the contribution is an attention-like quadratic form
+(the kernel-friendly hot spot — see ``repro.kernels.ssd_scan``); across chunks
+a cheap ``lax.scan`` carries the (p×n) state.  Everything here is the pure-jnp
+reference; the Pallas kernel accelerates the intra-chunk part on TPU.
+
+Sharding: heads shard over the 'model' axis ('ssm_heads'); state/headdim stay
+local, so the *only* collective in an SSM layer is the FSDP weight gather —
+which is why mamba2/zamba2 are the designated ``long_500k`` architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import Initializer, rms_norm
+from .sharding import ShardingRules
+
+__all__ = [
+    "ssm_dims",
+    "init_mamba_blocks",
+    "mamba_logical_axes",
+    "mamba_block",
+    "mamba_decode_step",
+    "init_ssm_state",
+    "ssm_state_logical_axes",
+    "ssd_chunked_ref",
+]
+
+
+def ssm_dims(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return dict(d_inner=d_inner, nheads=nheads, conv_dim=conv_dim,
+                proj_out=2 * d_inner + 2 * s.ngroups * s.d_state + nheads)
+
+
+def init_mamba_blocks(ini: Initializer, n_layers: int, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    dm = ssm_dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": ini.normal((n_layers, d, dm["proj_out"])),
+        "conv_w": ini.normal((n_layers, s.conv_width, dm["conv_dim"]), stddev=0.2),
+        "conv_b": ini.zeros((n_layers, dm["conv_dim"])),
+        "A_log": ini.zeros((n_layers, dm["nheads"])),  # A = -exp(A_log) in (-1, 0)
+        "D": ini.ones((n_layers, dm["nheads"])),
+        "dt_bias": ini.zeros((n_layers, dm["nheads"])),
+        "norm": ini.ones((n_layers, dm["d_inner"])),
+        "out_proj": ini.normal((n_layers, dm["d_inner"], d)),
+        "ln": ini.ones((n_layers, d)),
+    }
+
+
+def mamba_logical_axes() -> dict:
+    return {
+        "in_proj": (None, "w_embed", None),
+        "conv_w": (None, None, None),
+        "conv_b": (None, None),
+        "A_log": (None, None),
+        "D": (None, None),
+        "dt_bias": (None, None),
+        "norm": (None, "w_ff"),
+        "out_proj": (None, "w_ff", "w_embed"),
+        "ln": (None, None),
+    }
+
+
+# ------------------------------------------------------------------------------
+# Chunked SSD (train / prefill)
+# ------------------------------------------------------------------------------
+
+def ssd_chunked_ref(
+    x: jax.Array,   # (b, s, h, p)
+    dt: jax.Array,  # (b, s, h)  — post-softplus, positive
+    A: jax.Array,   # (h,)       — negative
+    B: jax.Array,   # (b, s, h, n) — already expanded from ngroups to heads
+    C: jax.Array,   # (b, s, h, n)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (b, h, p, n)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s_orig, h, p = x.shape
+    n = B.shape[3]
+    pad = (-s_orig) % chunk
+    if pad:  # dt=0 on padding => identity state transition, zero contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = x.shape[1]
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af  # (b, nc, chunk, h) — negative increments
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    seg_end = cs[:, :, -1, :]  # (b, nc, h): total chunk decay
+
+    # intra-chunk: y_intra[i] = Σ_{j<=i} C_i·B_j exp(cs_i - cs_j) dt_j x_j
+    Bh = B.astype(jnp.float32).reshape(b, nc, chunk, h, n)
+    Ch = C.astype(jnp.float32).reshape(b, nc, chunk, h, n)
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", Ch, Bh)  # (b,nc,h,i,j)
+    cs_h = cs.transpose(0, 1, 3, 2)  # (b, nc, h, chunk)
+    decay = cs_h[..., :, None] - cs_h[..., None, :]  # decay[b,z,h,i,j] = cs_i - cs_j
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal, jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bzhij,bzjh,bzjhp->bzihp", scores * L, dtf, xf)
+
+    # chunk state contribution: H_z = Σ_j exp(seg_end - cs_j) B_j dt_j x_j
+    w = jnp.exp(seg_end[:, :, None, :] - cs)  # (b, nc, chunk, h)
+    states = jnp.einsum("bzjhn,bzjh,bzjhp->bzhpn", Bh, w * dtf, xf)
+
+    # inter-chunk scan: carry H (b, h, p, n)
+    H0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+
+    def scan_body(H, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        H_in = H  # state entering this chunk
+        H_out = H * jnp.exp(dec)[:, :, None, None] + st
+        return H_out, H_in
+
+    sts = jnp.moveaxis(states, 1, 0)  # (nc, b, h, p, n)
+    decs = jnp.moveaxis(seg_end, 1, 0)  # (nc, b, h)
+    H_final, H_ins = jax.lax.scan(scan_body, H0, (sts, decs))
+
+    # inter-chunk output: y_inter[i] = C_i exp(cs_i) H_in
+    H_ins = jnp.moveaxis(H_ins, 0, 1)  # (b, nc, h, p, n)
+    y_inter = jnp.einsum("bzihn,bzhpn,bzih->bzihp", Ch, H_ins, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig], H_final
+
+
+# ------------------------------------------------------------------------------
+# Block wrappers
+# ------------------------------------------------------------------------------
+
+def _split_proj(z: jax.Array, cfg: ArchConfig):
+    s = cfg.ssm
+    dm = ssm_dims(cfg)
+    d_in = dm["d_inner"]
+    gn = s.ngroups * s.d_state
+    zgate = z[..., :d_in]
+    xBC = z[..., d_in : d_in + d_in + 2 * gn]
+    dt_raw = z[..., d_in + d_in + 2 * gn :]
+    return zgate, xBC, dt_raw
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via shifted adds (width 4). Returns (y, new_state).
+
+    state: (b, width-1, conv_dim) — trailing inputs from the previous segment.
+    """
+    width = w.shape[0]
+    b, s, c = xBC.shape
+    if state is None:
+        state = jnp.zeros((b, width - 1, c), xBC.dtype)
+    xp = jnp.concatenate([state, xBC], axis=1)  # (b, s + width - 1, c)
+    y = sum(xp[:, i : i + s, :] * w[i] for i in range(width)) + bias
+    new_state = xp[:, -(width - 1) :, :]
+    return jax.nn.silu(y), new_state
+
+
+def mamba_block(
+    p: dict, x: jax.Array, cfg: ArchConfig, rules: ShardingRules,
+    use_pallas: bool = False,
+    init_state: jax.Array | None = None,
+    conv_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One Mamba2 layer on a full sequence. Returns (x_out, ssm_state, conv_state)."""
+    s = cfg.ssm
+    dm = ssm_dims(cfg)
+    h = rms_norm(x, p["ln"])
+    z = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z = rules.shard(z, "batch", "seq", "ff")
+    zgate, xBC, dt_raw = _split_proj(z, cfg)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    d_in, gn = dm["d_inner"], s.ngroups * s.d_state
+    rep = dm["nheads"] // s.ngroups
+    xin = xBC[..., :d_in]
+    B = xBC[..., d_in : d_in + gn].reshape(*xBC.shape[:2], s.ngroups, s.d_state)
+    C = xBC[..., d_in + gn :].reshape(*xBC.shape[:2], s.ngroups, s.d_state)
+    B = rules.shard(jnp.repeat(B, rep, axis=2), "batch", "seq", "ssm_heads", None)
+    C = rules.shard(jnp.repeat(C, rep, axis=2), "batch", "seq", "ssm_heads", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = rules.shard(dt, "batch", "seq", "ssm_heads")
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], dm["nheads"], s.headdim)
+    xh = rules.shard(xh, "batch", "seq", "ssm_heads", None)
+    if use_pallas:
+        from ..kernels import ops as kops
+
+        y, final_state = kops.ssd_scan(xh, dt, A, B, C, chunk=s.chunk, init_state=init_state)
+    else:
+        y, final_state = ssd_chunked_ref(xh, dt, A, B, C, chunk=s.chunk, init_state=init_state)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(zgate), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + rules.shard(out, "batch", "seq", "embed"), final_state, new_conv
+
+
+def init_ssm_state(cfg: ArchConfig, n_layers: int, batch: int) -> dict:
+    s = cfg.ssm
+    dm = ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((n_layers, batch, dm["nheads"], s.headdim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, s.conv_width - 1, dm["conv_dim"]), jnp.bfloat16),
+    }
+
+
+def ssm_state_logical_axes() -> dict:
+    return {
+        "ssm": (None, "batch", "ssm_heads", None, None),
+        "conv": (None, "batch", None, "ff"),
+    }
+
+
+def mamba_decode_step(
+    p: dict, x: jax.Array, ssm_state: jax.Array, conv_state: jax.Array,
+    cfg: ArchConfig, rules: ShardingRules,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrent step.  x: (b, 1, d); state (b, h, p, n)."""
+    s = cfg.ssm
+    dm = ssm_dims(cfg)
+    h = rms_norm(x, p["ln"])
+    z = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    zgate, xBC, dt_raw = _split_proj(z, cfg)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    d_in, gn = dm["d_inner"], s.ngroups * s.d_state
+    xin = xBC[:, 0, :d_in]
+    B = xBC[:, 0, d_in : d_in + gn].reshape(-1, s.ngroups, s.d_state)
+    C = xBC[:, 0, d_in + gn :].reshape(-1, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (b, h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(-1, dm["nheads"], s.headdim).astype(jnp.float32)  # (b,h,p)
+    rep = dm["nheads"] // s.ngroups
+    Bh = rules.shard(jnp.repeat(B, rep, axis=1).astype(jnp.float32), "batch", "ssm_heads", None)
+    Ch = rules.shard(jnp.repeat(C, rep, axis=1).astype(jnp.float32), "batch", "ssm_heads", None)
+    decay = jnp.exp(dt * A)  # (b,h)
+    new_state = ssm_state * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh, xh)
+    new_state = rules.shard(new_state, "batch", "ssm_heads", None, None)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(zgate), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + rules.shard(out, "batch", "seq", "embed"), new_state, new_conv

@@ -1,0 +1,352 @@
+"""Dense decoder-only transformer (GQA, RoPE/M-RoPE, qk-norm, SwiGLU).
+
+Covers qwen3-32b, minitron-8b, phi3-medium-14b, codeqwen1.5-7b and the
+qwen2-vl-2b backbone (patch embeddings enter as precomputed vectors, M-RoPE
+position streams as inputs).  Layers are stacked (leading L dim) and applied
+with ``lax.scan``; remat policy per config.
+
+Head padding: Q heads pad to a multiple of the TP degree and KV heads pad to
+a divisor of the padded Q heads (phi3: 40->48 Q, 10->12 KV).  Padded heads
+have zero output-projection rows at init, so they contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attention, decode_attention
+from .common import Initializer, apply_rope, cross_entropy_loss, rms_norm, scan_layers, swiglu
+from .sharding import ShardingRules
+
+__all__ = [
+    "padded_dims",
+    "init_dense",
+    "dense_train_logits",
+    "dense_loss",
+    "dense_init_cache",
+    "dense_prefill",
+    "dense_decode_step",
+    "MROPE_SECTIONS",
+]
+
+TP_MULTIPLE = 16  # pad heads for the production model axis; rules drop
+                  # non-dividing constraints on smaller meshes automatically
+
+MROPE_SECTIONS = (16, 24, 24)  # qwen2-vl half-dim split (t, h, w)
+
+
+def padded_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(padded_q_heads, padded_kv_heads, padded_vocab)."""
+    hp = cfg.heads_padded(TP_MULTIPLE)
+    kv = cfg.n_kv_heads
+    while hp % kv:
+        kv += 1
+    return hp, kv, cfg.vocab_padded(TP_MULTIPLE)
+
+
+# ------------------------------------------------------------------------------
+# Init
+# ------------------------------------------------------------------------------
+
+def _attn_params(ini: Initializer, n: int, d: int, hp: int, kvp: int, hd: int, qk_norm: bool) -> dict:
+    p = {
+        "wq": ini.normal((n, d, hp, hd)),
+        "wk": ini.normal((n, d, kvp, hd)),
+        "wv": ini.normal((n, d, kvp, hd)),
+        "wo": ini.normal((n, hp, hd, d), stddev=1.0 / (hp * hd) ** 0.5),
+    }
+    if qk_norm:
+        p["q_norm"] = ini.ones((n, hd))
+        p["k_norm"] = ini.ones((n, hd))
+    return p
+
+
+def _mlp_params(ini: Initializer, n: int, d: int, f: int) -> dict:
+    return {"w1": ini.normal((n, d, f)), "w3": ini.normal((n, d, f)), "w2": ini.normal((n, f, d))}
+
+
+def init_dense(cfg: ArchConfig, key: jax.Array) -> dict:
+    hp, kvp, vp = padded_dims(cfg)
+    hd = cfg.resolved_head_dim
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    ini = Initializer(key, dtype=jnp.dtype(cfg.dtype))
+    blocks = {
+        "attn": _attn_params(ini, L, d, hp, kvp, hd, cfg.qk_norm),
+        "ln1": ini.ones((L, d)),
+        "ln2": ini.ones((L, d)),
+    }
+    if cfg.moe is not None:
+        from .moe import init_moe_ffn
+
+        blocks["moe"] = init_moe_ffn(ini, L, cfg)
+    else:
+        blocks["mlp"] = _mlp_params(ini, L, d, f)
+    return {
+        "embed": ini.normal((vp, d), stddev=1.0),
+        "blocks": blocks,
+        "final_norm": ini.ones((d,)),
+        "head": ini.normal((d, vp)),
+    }
+
+
+def param_logical_axes(cfg: ArchConfig) -> dict:
+    """Logical dim names per parameter (layer-stacked leading dim = None)."""
+    attn = {
+        "wq": (None, "w_embed", "w_heads", None),
+        "wk": (None, "w_embed", "w_kv_heads", None),
+        "wv": (None, "w_embed", "w_kv_heads", None),
+        "wo": (None, "w_heads", None, "w_embed"),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = (None, None)
+        attn["k_norm"] = (None, None)
+    blocks: dict = {"attn": attn, "ln1": (None, None), "ln2": (None, None)}
+    if cfg.moe is not None:
+        from .moe import moe_logical_axes
+
+        blocks["moe"] = moe_logical_axes(cfg)
+    else:
+        blocks["mlp"] = {
+            "w1": (None, "w_embed", "w_ff"),
+            "w3": (None, "w_embed", "w_ff"),
+            "w2": (None, "w_ff", "w_embed"),
+        }
+    return {
+        "embed": ("w_vocab", "w_embed"),
+        "blocks": blocks,
+        "final_norm": (None,),
+        "head": ("w_embed", "w_vocab"),
+    }
+
+
+# ------------------------------------------------------------------------------
+# Blocks
+# ------------------------------------------------------------------------------
+
+def _qkv(p: dict, x: jax.Array, positions: jax.Array, cfg: ArchConfig, rules: ShardingRules):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rules.shard(q, "batch", "seq", "heads", "head_dim")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    sections = MROPE_SECTIONS if cfg.mrope else None
+    q = apply_rope(q, positions, cfg.rope_theta, sections)
+    k = apply_rope(k, positions, cfg.rope_theta, sections)
+    return q, k, v
+
+
+def attn_block(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    rules: ShardingRules,
+    causal: bool = True,
+    use_pallas: bool = False,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
+    q, k, v = _qkv(p, x, positions, cfg, rules)
+    o = attention(q, k, v, rules, causal=causal, chunk=cfg.attn_chunk,
+                  use_pallas=use_pallas)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    # constraint directly on the einsum output: under sequence parallelism the
+    # heads-contraction partial sum lowers to reduce-scatter (not all-reduce)
+    return rules.shard(out, "batch", "seq_sp", "embed"), (k, v)
+
+
+def attn_block_decode(
+    p: dict,
+    x: jax.Array,  # (b, 1, d)
+    position: jax.Array,  # (b, 1) int32 — or (3, b, 1) for M-RoPE
+    idx: jax.Array,  # () int32 cache write index
+    k_cache: jax.Array,  # (b, kvp, S, hd)
+    v_cache: jax.Array,
+    cfg: ArchConfig,
+    rules: ShardingRules,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention; returns (out, new_k_cache, new_v_cache)."""
+    q, k, v = _qkv(p, x, position, cfg, rules)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.transpose(0, 2, 1, 3), (0, 0, idx, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.transpose(0, 2, 1, 3), (0, 0, idx, 0))
+    k_cache = rules.shard(k_cache, "batch", "kv_heads", "kv_seq", "head_dim")
+    v_cache = rules.shard(v_cache, "batch", "kv_heads", "kv_seq", "head_dim")
+    S = k_cache.shape[2]
+    length_mask = jnp.arange(S)[None, :] <= idx  # (1, S) broadcasting over batch
+    length_mask = jnp.broadcast_to(length_mask, (x.shape[0], S))
+    o = decode_attention(q, k_cache, v_cache, length_mask, rules)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, k_cache, v_cache
+
+
+def _ffn(p: dict, x: jax.Array, cfg: ArchConfig, rules: ShardingRules):
+    """Dense SwiGLU or MoE FFN. Returns (y, aux_loss)."""
+    if cfg.moe is not None:
+        from .moe import moe_ffn
+
+        return moe_ffn(p["moe"], x, cfg, rules)
+    y = swiglu(x, p["mlp"]["w1"], p["mlp"]["w3"], p["mlp"]["w2"], rules)
+    return y, jnp.zeros((), jnp.float32)
+
+
+def dense_layer(
+    p: dict, x: jax.Array, positions: jax.Array, cfg: ArchConfig, rules: ShardingRules,
+    use_pallas: bool = False,
+) -> tuple[jax.Array, jax.Array, tuple[jax.Array, jax.Array]]:
+    from jax.ad_checkpoint import checkpoint_name
+
+    h, kv = attn_block(p["attn"], rms_norm(x, p["ln1"]), positions, cfg, rules, use_pallas=use_pallas)
+    # residual stream lives seq-sharded under sequence parallelism ('seq_sp'
+    # maps to the model axis when enabled); naming the post-collective
+    # residuals lets the 'names' remat policy keep them, so the backward pass
+    # re-runs neither the attention/FFN all-reduces nor their reshards
+    x = checkpoint_name(rules.shard(x + h, "batch", "seq_sp", "embed"), "resid_attn")
+    y, aux = _ffn(p, rms_norm(x, p["ln2"]), cfg, rules)
+    x = checkpoint_name(rules.shard(x + y, "batch", "seq_sp", "embed"), "resid_mlp")
+    return x, aux, kv
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "names":
+        # save exactly the post-collective residuals: backward never re-runs
+        # the per-layer TP collectives (they dominate the collective roofline
+        # term under full remat)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "resid_attn", "resid_mlp"))
+    return jax.checkpoint(fn)
+
+
+# ------------------------------------------------------------------------------
+# Model entry points
+# ------------------------------------------------------------------------------
+
+def _embed_inputs(params, batch: dict, cfg: ArchConfig, rules: ShardingRules) -> jax.Array:
+    x = params["embed"][batch["tokens"]]  # gather over vocab-sharded table
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        x = jnp.concatenate([batch["img_embeds"].astype(x.dtype), x], axis=1)
+    return rules.shard(x, "batch", "seq_sp", "embed")
+
+
+def _positions_for(batch: dict, cfg: ArchConfig, seq: int) -> jax.Array:
+    if "positions" in batch:
+        return batch["positions"]
+    b = batch["tokens"].shape[0]
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (b, seq))
+    if cfg.mrope:  # text-only M-RoPE: all three streams equal
+        pos = jnp.broadcast_to(pos[None], (3, b, seq))
+    return pos
+
+
+def dense_train_logits(params, batch: dict, cfg: ArchConfig, rules: ShardingRules,
+                       use_pallas: bool = False) -> jax.Array:
+    x = _embed_inputs(params, batch, cfg, rules)
+    seq = x.shape[1]
+    positions = _positions_for(batch, cfg, seq)
+
+    def body(carry, lp):
+        xc, aux = carry
+        out, a, _ = dense_layer(lp, xc, positions, cfg, rules, use_pallas=use_pallas)
+        return (out, aux + a), None
+
+    (x, aux), _ = scan_layers(cfg, _remat(body, cfg.remat),
+                              (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return rules.shard(logits, "batch", "seq", "vocab"), aux
+
+
+def dense_loss(params, batch: dict, cfg: ArchConfig, rules: ShardingRules,
+               use_pallas: bool = False):
+    logits, aux = dense_train_logits(params, batch, cfg, rules, use_pallas=use_pallas)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        logits = logits[:, batch["img_embeds"].shape[1]:]
+    loss, metrics = cross_entropy_loss(logits, labels, cfg.vocab)
+    if cfg.moe is not None:
+        aux_term = cfg.moe.router_aux_coef * aux / cfg.n_layers
+        loss = loss + aux_term
+        metrics = dict(metrics, loss=loss, router_aux=aux_term)
+    return loss, metrics
+
+
+def dense_init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    _, kvp, _ = padded_dims(cfg)
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    shape = (L, batch, kvp, max_seq, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes() -> dict:
+    return {
+        "k": (None, "batch", "kv_heads", "kv_seq", None),
+        "v": (None, "batch", "kv_heads", "kv_seq", None),
+        "index": (),
+    }
+
+
+def dense_prefill(params, batch: dict, cfg: ArchConfig, rules: ShardingRules, max_seq: int,
+                  use_pallas: bool = False):
+    """Prefill: full forward, emit per-layer KV packed into a max_seq cache."""
+    x = _embed_inputs(params, batch, cfg, rules)
+    b, seq = x.shape[0], x.shape[1]
+    positions = _positions_for(batch, cfg, seq)
+
+    def body(xc, lp):
+        out, _, (k, v) = dense_layer(lp, xc, positions, cfg, rules, use_pallas=use_pallas)
+        return out, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    x, (ks, vs) = scan_layers(cfg, _remat(body, cfg.remat), x, params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+    cache = dense_init_cache(cfg, b, max_seq, dtype=ks.dtype)
+    pad = max_seq - seq
+    if pad:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cache["k"], cache["v"] = ks, vs
+    cache["index"] = jnp.asarray(seq, jnp.int32)
+    cache["k"] = rules.shard(cache["k"], None, "batch", "kv_heads", "kv_seq", None)
+    cache["v"] = rules.shard(cache["v"], None, "batch", "kv_heads", "kv_seq", None)
+    return logits, cache
+
+
+def dense_decode_step(params, tokens: jax.Array, cache: dict, cfg: ArchConfig, rules: ShardingRules):
+    """One decode step: tokens (b, 1) -> (logits (b, 1, Vp), updated cache)."""
+    x = params["embed"][tokens]
+    x = rules.shard(x, "batch", "seq", "embed")
+    b = x.shape[0]
+    idx = cache["index"]
+    position = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    if cfg.mrope:
+        position = jnp.broadcast_to(position[None], (3, b, 1))
+
+    def body(xc, layer_in):
+        lp, kc, vc = layer_in
+        h, nk, nv = attn_block_decode(lp["attn"], rms_norm(xc, lp["ln1"]),
+                                      position, idx, kc, vc, cfg, rules)
+        xc = xc + h
+        y, _ = _ffn(lp, rms_norm(xc, lp["ln2"]), cfg, rules)
+        return xc + y, (nk, nv)
+
+    x, (nks, nvs) = scan_layers(cfg, body, x, (params["blocks"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    new_cache = dict(cache, k=nks, v=nvs, index=idx + 1)
+    return rules.shard(logits, "batch", "seq", "vocab"), new_cache

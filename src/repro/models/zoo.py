@@ -1,0 +1,234 @@
+"""Uniform model API over all families.
+
+``Model`` wraps the per-family function sets behind one interface used by the
+trainer, the serving engine and the dry-run:
+
+    model.init(key) -> params
+    model.param_axes() -> logical-axis pytree (matches params)
+    model.loss(params, batch) -> (loss, metrics)
+    model.init_cache(batch, max_seq) -> cache pytree
+    model.cache_axes() -> logical-axis pytree (matches cache)
+    model.prefill(params, batch, max_seq) -> (logits, cache)
+    model.decode_step(params, tokens, cache) -> (logits, cache)
+    model.input_specs(shape) -> {name: ShapeDtypeStruct} for the dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCfg
+from .sharding import ShardingRules, make_rules
+from . import encdec, hybrid, ssm, transformer
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    rules: ShardingRules
+    use_pallas: bool = False
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> dict:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.init_dense(self.cfg, key)
+        if f == "ssm":
+            return self._init_ssm(key)
+        if f == "hybrid":
+            return hybrid.init_hybrid(self.cfg, key)
+        if f == "encdec":
+            return encdec.init_encdec(self.cfg, key)
+        raise ValueError(f)
+
+    def _init_ssm(self, key):
+        from .common import Initializer
+
+        cfg = self.cfg
+        ini = Initializer(key, dtype=jnp.dtype(cfg.dtype))
+        vp = cfg.vocab_padded(transformer.TP_MULTIPLE)
+        return {
+            "embed": ini.normal((vp, cfg.d_model), stddev=1.0),
+            "mamba": ssm.init_mamba_blocks(ini, cfg.n_layers, cfg),
+            "final_norm": ini.ones((cfg.d_model,)),
+            "head": ini.normal((cfg.d_model, vp)),
+        }
+
+    def param_axes(self) -> dict:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.param_logical_axes(self.cfg)
+        if f == "ssm":
+            return {
+                "embed": ("w_vocab", "w_embed"),
+                "mamba": ssm.mamba_logical_axes(),
+                "final_norm": (None,),
+                "head": ("w_embed", "w_vocab"),
+            }
+        if f == "hybrid":
+            return hybrid.hybrid_param_axes(self.cfg)
+        if f == "encdec":
+            return encdec.encdec_param_axes(self.cfg)
+        raise ValueError(f)
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.dense_loss(params, batch, self.cfg, self.rules, self.use_pallas)
+        if f == "ssm":
+            return self._ssm_loss(params, batch)
+        if f == "hybrid":
+            return hybrid.hybrid_loss(params, batch, self.cfg, self.rules, self.use_pallas)
+        if f == "encdec":
+            return encdec.encdec_loss(params, batch, self.cfg, self.rules, self.use_pallas)
+        raise ValueError(f)
+
+    def _ssm_forward(self, params, batch, collect_state=False):
+        from .common import rms_norm
+
+        cfg, rules = self.cfg, self.rules
+        x = params["embed"][batch["tokens"]]
+        x = rules.shard(x, "batch", "seq", "embed")
+
+        def body(xc, lp):
+            out, st, cv = ssm.mamba_block(lp, xc, cfg, rules, use_pallas=self.use_pallas)
+            return out, (st, cv) if collect_state else None
+
+        from .common import scan_layers
+
+        remat = (lambda f: f) if cfg.remat == "none" else jax.checkpoint
+        x, sts = scan_layers(cfg, remat(body), x, params["mamba"])
+        x = rms_norm(x, params["final_norm"])
+        return x, sts
+
+    def _ssm_loss(self, params, batch):
+        from .common import cross_entropy_loss
+
+        x, _ = self._ssm_forward(params, batch)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        logits = self.rules.shard(logits, "batch", "seq", "vocab")
+        return cross_entropy_loss(logits, batch["labels"], self.cfg.vocab)
+
+    # ------------------------------------------------------------------ serve
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.dense_init_cache(self.cfg, batch, max_seq)
+        if f == "ssm":
+            st = ssm.init_ssm_state(self.cfg, self.cfg.n_layers, batch)
+            st["index"] = jnp.zeros((), jnp.int32)
+            return st
+        if f == "hybrid":
+            return hybrid.hybrid_init_cache(self.cfg, batch, max_seq)
+        if f == "encdec":
+            return encdec.encdec_init_cache(self.cfg, batch, max_seq)
+        raise ValueError(f)
+
+    def cache_axes(self) -> dict:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.cache_logical_axes()
+        if f == "ssm":
+            return {**ssm.ssm_state_logical_axes(), "index": ()}
+        if f == "hybrid":
+            return hybrid.hybrid_cache_axes()
+        if f == "encdec":
+            return encdec.encdec_cache_axes()
+        raise ValueError(f)
+
+    def prefill(self, params, batch, max_seq: int):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.dense_prefill(params, batch, self.cfg, self.rules, max_seq,
+                                             self.use_pallas)
+        if f == "ssm":
+            return self._ssm_prefill(params, batch)
+        if f == "hybrid":
+            return hybrid.hybrid_prefill(params, batch, self.cfg, self.rules, max_seq,
+                                         self.use_pallas)
+        if f == "encdec":
+            return encdec.encdec_prefill(params, batch, self.cfg, self.rules, max_seq,
+                                         self.use_pallas)
+        raise ValueError(f)
+
+    def _ssm_prefill(self, params, batch):
+        x, (sts, cvs) = self._ssm_forward(params, batch, collect_state=True)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"])
+        cache = {"ssm": sts, "conv": cvs.astype(jnp.bfloat16),
+                 "index": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.dense_decode_step(params, tokens, cache, self.cfg, self.rules)
+        if f == "ssm":
+            return self._ssm_decode(params, tokens, cache)
+        if f == "hybrid":
+            return hybrid.hybrid_decode_step(params, tokens, cache, self.cfg, self.rules)
+        if f == "encdec":
+            return encdec.encdec_decode_step(params, tokens, cache, self.cfg, self.rules)
+        raise ValueError(f)
+
+    def _ssm_decode(self, params, tokens, cache):
+        from .common import rms_norm
+
+        cfg, rules = self.cfg, self.rules
+        x = params["embed"][tokens]
+        x = rules.shard(x, "batch", "seq", "embed")
+
+        def body(xc, inp):
+            lp, st, cv = inp
+            out, st2, cv2 = ssm.mamba_decode_step(lp, xc, st, cv.astype(xc.dtype), cfg, rules)
+            return out, (st2, cv2)
+
+        from .common import scan_layers
+
+        x, (sts, cvs) = scan_layers(cfg, body, x, (params["mamba"], cache["ssm"], cache["conv"]))
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        logits = rules.shard(logits, "batch", "seq", "vocab")
+        return logits, dict(cache, ssm=sts, conv=cvs.astype(cache["conv"].dtype),
+                            index=cache["index"] + 1)
+
+    # ------------------------------------------------------------------ specs
+    def input_specs(self, shape: ShapeCfg) -> dict:
+        """ShapeDtypeStructs for every model input of a given benchmark shape.
+
+        Train/prefill: token ids (+labels for train).  VLM: patch embeddings
+        and M-RoPE positions replace part of the text stream.  Enc-dec: frame
+        embeddings for the (stubbed) audio frontend.
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok = lambda seq: jax.ShapeDtypeStruct((b, seq), i32)
+        specs: dict[str, Any] = {}
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                s_img = cfg.img_tokens
+                s_txt = s - s_img
+                specs["tokens"] = tok(s_txt)
+                specs["img_embeds"] = jax.ShapeDtypeStruct((b, s_img, cfg.d_model), jnp.bfloat16)
+                specs["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+            elif cfg.family == "encdec":
+                specs["tokens"] = tok(s)
+                specs["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            else:
+                specs["tokens"] = tok(s)
+            if shape.kind == "train":
+                specs["labels"] = tok(s - cfg.img_tokens if cfg.family == "vlm" else s)
+        else:  # decode: one new token against a seq_len cache
+            specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        return specs
+
+
+def build_model(cfg: ArchConfig, mesh=None, use_pallas: bool = False) -> Model:
+    rules = make_rules(mesh, cfg.sharding_overrides)
+    return Model(cfg=cfg, rules=rules, use_pallas=use_pallas)

@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, adamw, adafactor, cosine_schedule, global_norm, make_optimizer
+
+__all__ = ["Optimizer", "adamw", "adafactor", "cosine_schedule", "global_norm", "make_optimizer"]

@@ -1,0 +1,1 @@
+from .failures import FailureDetector, StragglerPolicy, plan_elastic_remesh, surviving_subgraph

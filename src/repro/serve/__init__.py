@@ -1,0 +1,1 @@
+from .engine import DecodeParams, Request, ServingEngine, make_serve_steps

@@ -1,0 +1,1 @@
+from .trainer import TrainState, Trainer, init_state, make_train_step

@@ -1,0 +1,135 @@
+"""Collective schedules: data-flow correctness (symbolic execution) + cost
+model invariants + paper-qualitative orderings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collectives as C
+from repro.core import graphs, metrics, netsim
+from repro.core.routing import RoutingTable
+
+
+# ------------------------------------------------------------------------------
+# Symbolic data-flow execution of schedules
+# ------------------------------------------------------------------------------
+
+def exec_bcast(sched: C.Schedule, root: int) -> set[int]:
+    """Who holds the message after the schedule runs?"""
+    have = {root}
+    for rnd in sched.rounds:
+        got = set()
+        for t in rnd:
+            if t.src in have:
+                got.add(t.dst)
+        have |= got
+    return have
+
+
+def exec_alltoall(sched: C.Schedule) -> dict[tuple[int, int], bool]:
+    """Track that every ordered pair's chunk is delivered point-to-point."""
+    delivered = {}
+    for rnd in sched.rounds:
+        for t in rnd:
+            delivered[(t.src, t.dst)] = True
+    return delivered
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 31])
+def test_bcast_binomial_covers(n):
+    for root in (0, n // 2, n - 1):
+        sched = C.bcast_binomial(n, 1.0, root=root)
+        assert exec_bcast(sched, root) == set(range(n))
+        assert len(sched.rounds) == int(np.ceil(np.log2(n)))
+
+
+@pytest.mark.parametrize("n", [4, 8, 13])
+def test_bcast_flood_covers(n):
+    g = graphs.ring(n) if n % 2 else graphs.wagner(n)
+    sched = C.bcast_flood(n, 1.0, g, root=1)
+    assert exec_bcast(sched, 1) == set(range(n))
+    # flood finishes in eccentricity(root) rounds
+    ecc = metrics.eccentricities(g)[1]
+    assert len(sched.rounds) == ecc
+    # every transfer is a graph edge (1 hop)
+    es = set(g.edges)
+    for rnd in sched.rounds:
+        for t in rnd:
+            assert (min(t.src, t.dst), max(t.src, t.dst)) in es
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_alltoall_pairwise_delivers_all_pairs(n):
+    sched = C.alltoall_pairwise(n, 1.0)
+    d = exec_alltoall(sched)
+    assert len(d) == n * (n - 1)
+    assert len(sched.rounds) == n - 1
+
+
+def test_reduce_binomial_mirrors_bcast():
+    n = 16
+    b = C.bcast_binomial(n, 1.0, root=3)
+    r = C.reduce_binomial(n, 1.0, root=3)
+    fwd = sorted((t.src, t.dst) for rnd in b.rounds for t in rnd)
+    rev = sorted((t.dst, t.src) for rnd in r.rounds for t in rnd)
+    assert fwd == rev
+
+
+def test_scatter_chunks_conserved():
+    n = 16
+    sched = C.scatter_binomial(n, 1.0, root=0)
+    # total chunk-bytes leaving the root equals n-1 chunks
+    sent_from_root = sum(t.nbytes for rnd in sched.rounds for t in rnd if t.src == 0)
+    assert sent_from_root == n - 1
+
+
+# ------------------------------------------------------------------------------
+# Cost model
+# ------------------------------------------------------------------------------
+
+def test_allreduce_ring_bandwidth_optimal_bytes():
+    n, size = 8, 1024.0
+    sched = C.allreduce_ring(n, size)
+    per_rank = sched.total_bytes() / n
+    assert per_rank == pytest.approx(2 * size * (n - 1) / n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 16), st.floats(1e3, 1e8))
+def test_simulate_monotone_in_size(n, size):
+    if n % 2:
+        n += 1
+    g = graphs.wagner(n)
+    rt = RoutingTable.build(g)
+    t1 = C.simulate(C.alltoall_pairwise(n, size), rt, C.TAISHAN_LINK).time
+    t2 = C.simulate(C.alltoall_pairwise(n, size * 2), rt, C.TAISHAN_LINK).time
+    assert t2 > t1
+
+
+def test_lower_mpl_is_faster_alltoall():
+    """The paper's headline: minimal-MPL graphs beat higher-MPL ones."""
+    from repro.core import search
+
+    ring = graphs.ring(16)
+    opt = search.find_optimal(16, 4, seed=0, budget=3000)
+    t_ring = C.collective_time(ring, "alltoall", 1 << 20).time
+    t_opt = C.collective_time(opt, "alltoall", 1 << 20).time
+    assert t_opt < t_ring / 1.8  # paper Fig.4d: ratio 2.16
+
+
+def test_torus_congestion_pathology():
+    """Static routing congests the torus: its alltoall advantage over ring is
+    far below its MPL advantage (paper's repeated observation)."""
+    ring = graphs.ring(16)
+    torus = graphs.torus([4, 4])
+    mpl_ratio = metrics.mpl(ring) / metrics.mpl(torus)  # 2.0
+    t_ring = C.collective_time(ring, "alltoall", 1 << 20).time
+    t_torus = C.collective_time(torus, "alltoall", 1 << 20).time
+    speedup = t_ring / t_torus
+    assert speedup < mpl_ratio * 0.9
+
+
+def test_rootavg_matches_manual_mean():
+    g = graphs.wagner(8)
+    rep = C.collective_time(g, "bcast", 1024.0)
+    manual = np.mean([C.collective_time(g, "bcast", 1024.0, root=r).time for r in range(8)])
+    assert rep.time == pytest.approx(manual)

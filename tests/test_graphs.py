@@ -1,0 +1,197 @@
+"""Graph layer: constructors, metrics (vs networkx oracle), paper Table 1/2/4
+invariants, routing, Hamiltonian cycles.  Property-based tests use hypothesis
+with networkx as the independent oracle (the library itself never imports
+networkx)."""
+import math
+
+import numpy as np
+import networkx as nx
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graphs, hamiltonian, metrics, routing, search
+
+
+def to_nx(g: graphs.Graph) -> nx.Graph:
+    G = nx.Graph()
+    G.add_nodes_from(range(g.n))
+    G.add_edges_from(g.edges)
+    return G
+
+
+# ------------------------------------------------------------------------------
+# Property tests vs networkx
+# ------------------------------------------------------------------------------
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(10, 24))  # n >= 2k+2: pairing model succeeds reliably
+    k = draw(st.sampled_from([2, 3, 4]))
+    if n * k % 2:
+        n += 1
+    seed = draw(st.integers(0, 10_000))
+    return graphs.random_regular(n, k, seed=seed, max_tries=2000)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graph())
+def test_apsp_matches_networkx(g):
+    G = to_nx(g)
+    d = metrics.apsp(g)
+    if nx.is_connected(G):
+        nxd = dict(nx.all_pairs_shortest_path_length(G))
+        for u in range(g.n):
+            for v in range(g.n):
+                assert d[u, v] == nxd[u][v]
+        assert metrics.mpl(g) == pytest.approx(nx.average_shortest_path_length(G))
+        assert metrics.diameter(g) == nx.diameter(G)
+    else:
+        assert math.isinf(metrics.mpl(g))
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graph())
+def test_girth_matches_networkx(g):
+    G = to_nx(g)
+    want = nx.girth(G) if hasattr(nx, "girth") else min(
+        (len(c) for c in nx.cycle_basis(G)), default=math.inf)
+    got = metrics.girth(g)
+    if hasattr(nx, "girth"):
+        assert got == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_graph())
+def test_routing_paths_are_shortest(g):
+    if not metrics.is_connected(g):
+        return
+    rt = routing.RoutingTable.build(g)
+    d = metrics.apsp(g)
+    es = set(g.edges)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        u, v = rng.integers(g.n, size=2)
+        if u == v:
+            continue
+        p = rt.path(int(u), int(v))
+        assert len(p) - 1 == d[u, v]
+        for a, b in zip(p[:-1], p[1:]):
+            assert (min(a, b), max(a, b)) in es
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(6, 12), st.integers(0, 100))
+def test_bisection_width_even_degree_bound(half_n, seed):
+    """BW of a connected k-regular graph is between 1 and n*k/4 + k."""
+    n, k = 2 * half_n, 4
+    g = graphs.random_regular(n, k, seed=seed, max_tries=2000)
+    if not metrics.is_connected(g):
+        return
+    bw = metrics.bisection_width(g, restarts=8, seed=0)
+    assert 1 <= bw <= g.m
+
+
+# ------------------------------------------------------------------------------
+# Paper ground truth (TABLE 1)
+# ------------------------------------------------------------------------------
+
+TABLE1 = [
+    # builder, D, MPL(2dp), BW
+    (lambda: graphs.ring(16), 8, 4.27, 2),
+    (lambda: graphs.wagner(16), 4, 2.60, 4),
+    (lambda: graphs.bidiakis(16), 5, 2.53, 4),
+    (lambda: graphs.torus([4, 4]), 4, 2.13, 8),
+    (lambda: graphs.ring(32), 16, 8.26, 2),
+    (lambda: graphs.wagner(32), 8, 4.61, 4),
+    (lambda: graphs.bidiakis(32), 9, 4.06, 4),
+    (lambda: graphs.torus([4, 8]), 6, 3.10, 8),
+    (lambda: graphs.chvatal32(), 4, 2.55, 8),
+]
+
+
+@pytest.mark.parametrize("builder,D,MPL,BW", TABLE1, ids=[x[0]().name for x in TABLE1])
+def test_table1_invariants(builder, D, MPL, BW):
+    g = builder()
+    d = metrics.apsp(g)
+    assert metrics.diameter(g, d) == D
+    assert round(metrics.mpl(g, d), 2) == pytest.approx(MPL, abs=0.011)
+    assert metrics.bisection_width(g, restarts=24, seed=0) == BW
+    assert g.is_regular()
+
+
+def test_table4_fixed_rows():
+    """Paper TABLE 4: the non-searched 256-node rows."""
+    rows = [
+        (graphs.torus([4, 4, 4, 4]), 8, 4.02, 128),
+        (graphs.torus([4, 8, 8]), 10, 5.02, 64),
+        (graphs.torus([16, 16]), 16, 8.03, 32),
+        (graphs.bidiakis(256), 65, 25.09, 4),
+        (graphs.wagner(256), 64, 32.62, 4),
+        (graphs.ring(256), 128, 64.25, 2),
+    ]
+    for g, D, MPL, BW in rows:
+        d = metrics.apsp(g)
+        assert metrics.diameter(g, d) == D, g.name
+        assert round(metrics.mpl(g, d), 2) == pytest.approx(MPL, abs=0.011), g.name
+        bw = metrics.bisection_width(g, restarts=8, seed=0)
+        assert bw <= BW * 1.01 + 1e-9, g.name  # heuristic gives upper bound
+        if g.name.startswith(("(256,2)", "(256,3)")):
+            assert bw == BW, g.name
+
+
+def test_moore_bounds():
+    # Cerf et al. values: ring of 16 at k=2 achieves its own bound
+    assert metrics.mpl_lower_bound(16, 2) == pytest.approx(4.2667, abs=1e-3)
+    assert metrics.diameter_lower_bound(16, 3) == 3
+    assert metrics.diameter_lower_bound(32, 3) == 4
+    # optimal (16,4) reaches MPL 1.75 >= bound
+    assert metrics.mpl_lower_bound(16, 4) <= 1.75
+
+
+def test_dragonfly_paper_instances():
+    """Dragonfly (a,g,h) instances from TABLE 2 (paper): n and degree."""
+    g20 = graphs.dragonfly(4, 5, 1)
+    assert g20.n == 20 and g20.degree() == 4
+    g30 = graphs.dragonfly(5, 6, 1)
+    assert g30.n == 30 and g30.degree() == 5
+    g36 = graphs.dragonfly(4, 9, 2)
+    assert g36.n == 36 and g36.degree() == 5
+    for g in (g20, g30, g36):
+        assert metrics.is_connected(g)
+
+
+def test_build_spec_parser():
+    assert graphs.build("ring:16").n == 16
+    assert graphs.build("torus:4x8").name.startswith("(32,4)")
+    assert graphs.build("circulant:32:1,7").degree() == 4
+    assert graphs.build("dragonfly:4,5,1").n == 20
+
+
+# ------------------------------------------------------------------------------
+# Hamiltonian cycles
+# ------------------------------------------------------------------------------
+
+def test_hamiltonian_embedded_ring():
+    g = graphs.wagner(16)
+    assert hamiltonian.hamiltonian_cycle(g) == list(range(16))
+
+
+def test_hamiltonian_torus():
+    g = graphs.torus([4, 4])
+    cyc = hamiltonian.hamiltonian_cycle(g)
+    assert cyc is not None and sorted(cyc) == list(range(16))
+    es = set(g.edges)
+    for a, b in zip(cyc, cyc[1:] + cyc[:1]):
+        assert (min(a, b), max(a, b)) in es
+    # analytic snake on even torus is also a cycle
+    snake = hamiltonian.torus_hamiltonian([4, 4])
+    assert sorted(snake) == list(range(16))
+
+
+def test_link_loads_conservation():
+    g = graphs.torus([4, 4])
+    rt = routing.RoutingTable.build(g)
+    loads = rt.link_loads()
+    # total link traffic == sum over pairs of hop distance
+    d = metrics.apsp(g)
+    assert sum(loads.values()) == pytest.approx(d[~np.eye(16, dtype=bool)].sum())

@@ -1,0 +1,97 @@
+"""Layout QAP optimizer + elastic remesh + serving engine."""
+import numpy as np
+import pytest
+
+from repro.core import graphs, layout, metrics
+from repro.runtime import FailureDetector, plan_elastic_remesh, surviving_subgraph
+
+
+def test_mesh_traffic_structure():
+    t = layout.mesh_traffic((4, 4), (1.0, 2.0))
+    assert t.shape == (16, 16)
+    assert np.allclose(t, t.T)
+    # each rank exchanges the axis weight with its 2 ring neighbours per axis
+    assert t[0].sum() == pytest.approx(2 * 1.0 + 2 * 2.0)
+
+
+def test_layout_identity_optimal_on_matching_torus():
+    g = graphs.torus([4, 4])
+    tr = layout.mesh_traffic((4, 4), (1.0, 1.0))
+    res = layout.optimize_layout(g, tr, seed=0, n_iter=3000)
+    assert res.cost >= 0
+    # natural order is already optimal: no improvement possible
+    assert res.cost == pytest.approx(res.identity_cost)
+
+
+def test_layout_improves_mismatched_order():
+    g = graphs.ring(16)
+    tr = layout.mesh_traffic((4, 4), (1.0, 8.0))
+    res = layout.optimize_layout(g, tr, seed=1, n_iter=6000)
+    assert res.improvement > 0.25
+    assert sorted(res.perm.tolist()) == list(range(16))
+
+
+def test_layout_cost_delta_consistent():
+    """Incremental SA deltas must equal full recomputation at the end."""
+    g = graphs.wagner(16)
+    tr = layout.mesh_traffic((4, 4), (1.0, 3.0))
+    res = layout.optimize_layout(g, tr, seed=0, n_iter=2000)
+    hops = metrics.apsp(g)
+    assert res.cost == pytest.approx(layout.layout_cost(tr, hops, res.perm))
+
+
+def test_failure_detector():
+    fd = FailureDetector(n_nodes=4, timeout_s=5.0)
+    for i in range(4):
+        fd.heartbeat(i, t=100.0)
+    fd.heartbeat(2, t=104.0)
+    assert fd.dead(now=106.0) == [0, 1, 3]
+    assert fd.dead(now=104.5) == []
+
+
+def test_surviving_subgraph():
+    g = graphs.torus([4, 4])
+    sub, alive = surviving_subgraph(g, dead=[0, 5])
+    assert sub.n == 14 and 0 not in [a for a in alive if a in (0, 5)]
+    assert metrics.is_connected(sub)
+
+
+def test_elastic_remesh_plan():
+    g = graphs.torus([4, 8])
+    plan = plan_elastic_remesh(g, dead=[1, 9, 20], axis_bytes=(1.0, 4.0), layout_iters=1500)
+    assert np.prod(plan.mesh_shape) <= 29
+    assert not (set(plan.device_order) & {1, 9, 20})
+    assert len(set(plan.device_order)) == len(plan.device_order)
+    assert plan.connected
+
+
+def test_elastic_remesh_disconnected_fallback():
+    # sever the ring into two components: largest component used
+    g = graphs.ring(8)
+    plan = plan_elastic_remesh(g, dead=[0, 4], axis_bytes=(1.0,), layout_iters=300)
+    assert np.prod(plan.mesh_shape) <= 3  # components of size 3
+    assert plan.connected
+
+
+def test_serving_engine_end_to_end():
+    import jax
+    from repro.configs import get_config, reduced_config
+    from repro.models import build_model
+    from repro.serve import DecodeParams, Request, ServingEngine
+
+    cfg = reduced_config(get_config("minitron-8b"))
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    eng = ServingEngine(m, params, max_seq=64, slots=3,
+                        decode=DecodeParams(temperature=0.0, max_new_tokens=5))
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=4 + i).astype(np.int32),
+                           max_new_tokens=5))
+    done = eng.run()
+    assert len(done) == 3
+    for r in done:
+        assert len(r.out_tokens) == 5
+        assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+    st = eng.stats(done)
+    assert st["tokens"] == 15 and st["throughput_tok_s"] > 0

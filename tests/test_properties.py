@@ -1,0 +1,82 @@
+"""Cross-cutting property tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collectives as C
+from repro.core import graphs, metrics
+from repro.core.routing import RoutingTable
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 12), st.floats(1.0, 1e6), st.integers(0, 50))
+def test_wire_work_equals_bytes_times_hops(n, size, seed):
+    """simulate()'s total_link_bytes must equal Σ transfer_bytes × hops."""
+    if n % 2:
+        n += 1
+    g = graphs.random_regular(n, 3, seed=seed, max_tries=2000)
+    if not metrics.is_connected(g):
+        return
+    rt = RoutingTable.build(g)
+    sched = C.alltoall_pairwise(n, size)
+    rep = C.simulate(sched, rt, C.TAISHAN_LINK)
+    want = sum(t.nbytes * rt.dist[t.src, t.dst] for r in sched.rounds for t in r)
+    assert rep.total_link_bytes == pytest.approx(want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 5), st.integers(0, 50))
+def test_edge_swap_preserves_degrees(k, seed):
+    """The paper's SA move (edge swap) must keep the graph k-regular."""
+    from repro.core.search import _edge_swap
+    from repro.core.graphs import random_hamiltonian_regular, ring
+
+    n = 20  # sparse enough that the chord pairing model converges at k<=5
+    if n * (k - 2) % 2:
+        k += 1
+    g = random_hamiltonian_regular(n, k, seed=seed, max_tries=3000)
+    adj = g.adjacency()
+    rng = np.random.default_rng(seed)
+    ring_mask = ring(n).adjacency()
+    for _ in range(20):
+        prop = _edge_swap(adj, ring_mask, rng)
+        if prop is None:
+            continue
+        assert (prop.sum(1) == k).all()
+        assert (prop == prop.T).all()
+        assert not np.diag(prop).any()
+        adj = prop
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 20), st.integers(0, 30))
+def test_mpl_lower_bound_is_a_bound(n, seed):
+    if n % 2:
+        n += 1
+    g = graphs.random_regular(n, 3, seed=seed, max_tries=2000)
+    if not metrics.is_connected(g):
+        return
+    assert metrics.mpl(g) >= metrics.mpl_lower_bound(n, 3) - 1e-9
+    assert metrics.diameter(g) >= metrics.diameter_lower_bound(n, 3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 10), st.integers(1, 7))
+def test_flood_bcast_round_count_is_eccentricity(half_n, root):
+    n = 2 * half_n
+    g = graphs.wagner(n)
+    root = root % n
+    sched = C.bcast_flood(n, 1.0, g, root=root)
+    assert len(sched.rounds) == metrics.eccentricities(g)[root]
+
+
+def test_layout_qap_never_worse_than_identity():
+    from repro.core import layout
+
+    for seed in range(4):
+        g = graphs.random_regular(16, 4, seed=seed, max_tries=2000)
+        if not metrics.is_connected(g):
+            continue
+        tr = layout.mesh_traffic((4, 4), (1.0, 5.0))
+        res = layout.optimize_layout(g, tr, seed=seed, n_iter=2000)
+        assert res.cost <= res.identity_cost + 1e-9

@@ -1,0 +1,80 @@
+"""Topology discovery (paper Algorithm 1 + tiers): optimal-MPL targets from
+TABLE 1/2 must be reached; determinism per seed; bound gaps at 256 nodes."""
+import numpy as np
+import pytest
+
+from repro.core import metrics, search
+from repro.core.graphs import Graph
+
+
+def _props(g: Graph):
+    d = metrics.apsp(g)
+    return metrics.diameter(g, d), metrics.mpl(g, d)
+
+
+@pytest.mark.parametrize("n,k,mpl_target", [(16, 4, 1.75), (16, 3, 2.20)])
+def test_sa_search_reaches_paper_optimal_16(n, k, mpl_target):
+    res = search.sa_search(n, k, seed=0, n_iter=4000, target_mpl=mpl_target)
+    assert res.mpl <= mpl_target + 1e-9
+    assert res.graph.is_regular() and res.graph.degree() == k
+
+
+@pytest.mark.slow
+def test_sa_search_reaches_paper_optimal_32():
+    # (32,4)-Optimal: MPL 2.35 (paper TABLE 1)
+    g = search.find_optimal(32, 4, seed=0, budget=6000)
+    _, mpl = _props(g)
+    assert mpl <= 2.36
+
+
+def test_search_deterministic_per_seed():
+    a = search.sa_search(16, 4, seed=7, n_iter=800)
+    b = search.sa_search(16, 4, seed=7, n_iter=800)
+    assert a.graph.edges == b.graph.edges
+    c = search.sa_search(16, 4, seed=8, n_iter=800)
+    assert a.mpl == b.mpl
+    # different seed may find a different graph (not asserted) but must be valid
+    assert c.graph.degree() == 4
+
+
+def test_exhaustive_tiny():
+    res = search.exhaustive_search(10, 3)
+    assert res.graph.degree() == 3
+    # The global (10,3) optimum is the Petersen graph (MPL 1.6667) — but it is
+    # famously NON-Hamiltonian, and the paper's search space (like ours) is
+    # ring+chords.  Best Hamiltonian (10,3): MPL 79/45 = 1.7556.
+    assert res.mpl <= 79 / 45 + 1e-9
+
+
+def test_circulant_search_large():
+    res = search.circulant_search(64, 4, seed=0, n_iter=120)
+    assert res.graph.degree() == 4
+    d, mpl = _props(res.graph)
+    # must beat the (64,4) torus 8x8 (MPL 4.06) from the symmetric subspace
+    assert mpl < 4.06
+
+
+@pytest.mark.slow
+def test_symmetric_sa_256_bound_gap():
+    """Paper TABLE 4: (256,4)-Suboptimal MPL within ~2% of lower bound + 0.05."""
+    res = search.symmetric_sa_search(256, 4, seed=0, n_iter=1200, fold=4)
+    assert res.graph.degree() == 4
+    assert res.graph.n == 256
+    # paper reports gaps 0.03-0.08 absolute at degrees 3-8; allow slack here
+    # (full 96-hour budget not available in CI) but require clear superiority
+    # over the same-degree torus
+    torus_mpl = 8.03
+    assert res.mpl < torus_mpl * 0.75
+    # rotational symmetry: rotating by n/fold maps edges to edges
+    s = 256 // 4
+    es = set(res.graph.edges)
+    for (u, v) in list(es)[:50]:
+        a, b = (u + s) % 256, (v + s) % 256
+        assert (min(a, b), max(a, b)) in es
+
+
+def test_known_optimal_targets_table():
+    # table stores the paper's 2-decimal values; (32,4) = 2.35 *is* the Cerf
+    # bound 2.3548 rounded down, hence the 0.01 slack
+    for (n, k), mpl in search.KNOWN_OPTIMAL_MPL.items():
+        assert mpl >= metrics.mpl_lower_bound(n, k) - 0.01
