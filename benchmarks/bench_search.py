@@ -1,0 +1,170 @@
+"""Search-engine benchmark: wall time + best-MPL-vs-Cerf-bound gap.
+
+Measures the rebuilt parallel-replica incremental engine against a faithful
+re-implementation of the seed's full-recompute SA loop (BFS from every vertex
+per proposal), at equal iteration count, and times the large-N circulant
+tier.  Emits the usual CSV rows AND a machine-readable
+``results/benchmarks/BENCH_search.json`` so CI can track the perf trajectory:
+
+    {"machine": {...}, "results": [
+        {"name": "sa_n64_k4", "engine_s": ..., "seed_s": ..., "speedup": ...,
+         "engine_mpl": ..., "seed_mpl": ..., "mpl_lb": ..., "gap_pct": ...},
+        {"name": "circulant_n512_k6", "wall_s": ..., "mpl": ..., "gap_pct": ...},
+        ...]}
+"""
+import json
+import math
+import os
+import platform
+import time
+
+import numpy as np
+
+from . import common
+from repro.core import metrics, search
+from repro.core.graphs import random_hamiltonian_regular, ring
+
+
+# ------------------------------------------------------------------------------
+# Faithful seed baseline: full APSP recompute per proposal (frozen here so the
+# speedup stays measurable after the engine rewrite).
+# ------------------------------------------------------------------------------
+
+def _mpl_full(adj: np.ndarray) -> tuple[float, float]:
+    n = adj.shape[0]
+    a32 = adj.astype(np.float32)
+    reach = np.eye(n, dtype=bool)
+    frontier = reach.astype(np.float32)
+    total = 0.0
+    d = 0
+    while True:
+        nxt = (frontier @ a32) > 0
+        newf = nxt & ~reach
+        if not newf.any():
+            break
+        d += 1
+        total += d * newf.sum()
+        reach |= newf
+        frontier = newf.astype(np.float32)
+    if not reach.all():
+        return float("inf"), float("inf")
+    return total / (n * (n - 1)), float(d)
+
+
+def _seed_sa_search(n, k, seed=0, n_iter=4000, t_start=0.1, t_end=1e-4):
+    """The seed repo's Algorithm 1 loop, verbatim semantics."""
+    rng = np.random.default_rng(seed)
+    g0 = random_hamiltonian_regular(n, k, seed=seed)
+    adj = g0.adjacency()
+    ring_mask = ring(n).adjacency()
+    gamma = math.exp(math.log(t_end / t_start) / n_iter)
+    cur_mpl, cur_d = _mpl_full(adj)
+    best_mpl, best_d = cur_mpl, cur_d
+    t = t_start
+    for _ in range(n_iter):
+        iu, ju = np.where(np.triu(adj & ~ring_mask))
+        t *= gamma
+        if len(iu) < 2:
+            continue
+        e1, e2 = rng.choice(len(iu), size=2, replace=False)
+        a, b = int(iu[e1]), int(ju[e1])
+        c, d = int(iu[e2]), int(ju[e2])
+        if len({a, b, c, d}) != 4:
+            continue
+        p1, p2 = ((a, c), (b, d)) if rng.integers(2) else ((a, d), (b, c))
+        if adj[p1] or adj[p2]:
+            continue
+        prop = adj.copy()
+        prop[a, b] = prop[b, a] = False
+        prop[c, d] = prop[d, c] = False
+        prop[p1] = prop[p1[::-1]] = True
+        prop[p2] = prop[p2[::-1]] = True
+        new_mpl, new_d = _mpl_full(prop)
+        dm = new_mpl - cur_mpl
+        if dm < 0 or rng.random() < math.exp(-dm / max(t, 1e-12)):
+            adj, cur_mpl, cur_d = prop, new_mpl, new_d
+            if (cur_mpl, cur_d) < (best_mpl, best_d):
+                best_mpl, best_d = cur_mpl, cur_d
+    return best_mpl, best_d
+
+
+def run(smoke: bool = False) -> common.Rows:
+    rows = common.Rows("bench_search")
+    results = []
+
+    # warm the optional C kernel (first use compiles it — keep that out of
+    # the timed regions) and prime numpy/BLAS
+    has_c = metrics.IncrementalAPSP(ring(8).adjacency()).fast is not None
+    search.sa_search(12, 3, seed=0, n_iter=20)
+
+    # --- SA engine vs seed full-recompute, equal iteration count -----------
+    n_iter = 1000 if smoke else 4000
+    for (n, k) in ([(32, 4)] if smoke else [(32, 4), (64, 4)]):
+        lb = metrics.mpl_lower_bound(n, k)
+        t0 = time.perf_counter()
+        res = search.sa_search(n, k, seed=0, n_iter=n_iter)
+        engine_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        seed_mpl, _ = _seed_sa_search(n, k, seed=0, n_iter=n_iter)
+        seed_s = time.perf_counter() - t0
+        speedup = seed_s / engine_s if engine_s > 0 else float("inf")
+        rows.add(f"sa_n{n}_k{k}", engine_s,
+                 f"{n_iter} iters engine={engine_s:.3f}s seed={seed_s:.3f}s "
+                 f"speedup={speedup:.1f}x mpl={res.mpl:.4f} (seed {seed_mpl:.4f}) "
+                 f"lb={lb:.4f} delta={res.evals_delta} full={res.evals_full}")
+        results.append({
+            "name": f"sa_n{n}_k{k}", "n": n, "k": k, "iters": n_iter,
+            "engine_s": round(engine_s, 4), "seed_s": round(seed_s, 4),
+            "speedup": round(speedup, 2),
+            "engine_mpl": res.mpl, "seed_mpl": seed_mpl, "mpl_lb": lb,
+            "gap_pct": round((res.mpl / lb - 1) * 100, 2),
+            "evals_delta": res.evals_delta, "evals_full": res.evals_full,
+        })
+
+    # --- replica scaling: quality at fixed schedule -------------------------
+    if not smoke:
+        for r in (1, 4):
+            t0 = time.perf_counter()
+            res = search.sa_search(64, 4, seed=0, n_iter=4000, replicas=r)
+            dt = time.perf_counter() - t0
+            lb = metrics.mpl_lower_bound(64, 4)
+            rows.add(f"sa_replicas{r}_n64", dt,
+                     f"mpl={res.mpl:.4f} gap={(res.mpl / lb - 1) * 100:.1f}%")
+            results.append({
+                "name": f"sa_replicas{r}_n64", "n": 64, "k": 4, "replicas": r,
+                "wall_s": round(dt, 4), "mpl": res.mpl, "mpl_lb": lb,
+                "gap_pct": round((res.mpl / lb - 1) * 100, 2),
+            })
+
+    # --- large-N circulant tier ---------------------------------------------
+    cases = [(256, 6, 200)] if smoke else [(256, 4, 400), (512, 6, 400), (1024, 8, 400)]
+    for (n, k, iters) in cases:
+        lb = metrics.mpl_lower_bound(n, k)
+        t0 = time.perf_counter()
+        res = search.circulant_search(n, k, seed=0, n_iter=iters)
+        dt = time.perf_counter() - t0
+        rows.add(f"circulant_n{n}_k{k}", dt,
+                 f"mpl={res.mpl:.4f} lb={lb:.4f} gap={(res.mpl / lb - 1) * 100:.1f}% "
+                 f"D={res.diameter:.0f} offs={list(res.offsets or ())}")
+        results.append({
+            "name": f"circulant_n{n}_k{k}", "n": n, "k": k, "iters": iters,
+            "wall_s": round(dt, 4), "mpl": res.mpl, "mpl_lb": lb,
+            "gap_pct": round((res.mpl / lb - 1) * 100, 2),
+            "diameter": res.diameter, "offsets": list(res.offsets or ()),
+        })
+
+    out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")
+    os.makedirs(out_dir, exist_ok=True)
+    payload = {
+        "machine": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+            "c_kernel": has_c,
+        },
+        "smoke": smoke,
+        "results": results,
+    }
+    with open(os.path.join(out_dir, "BENCH_search.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return rows

@@ -21,10 +21,14 @@ from repro.core.graphs import Graph, from_edges  # noqa: E402
 CACHE_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                          "results", "benchcache")
 
+# Bump whenever the search engine behind the cached builders changes, so a
+# pre-existing results/benchcache cannot silently serve stale graphs.
+CACHE_VERSION = 2
+
 
 def cached_graph(key: str, builder) -> Graph:
     os.makedirs(CACHE_DIR, exist_ok=True)
-    fn = os.path.join(CACHE_DIR, key + ".json")
+    fn = os.path.join(CACHE_DIR, f"v{CACHE_VERSION}_{key}.json")
     if os.path.exists(fn):
         with open(fn) as f:
             d = json.load(f)
@@ -42,9 +46,15 @@ def optimal(n: int, k: int, seed: int = 0, budget: int = 5000, method=None) -> G
 
 
 def suboptimal_sym(n: int, k: int, seed: int = 0, n_iter: int = 1500, fold: int = 4) -> Graph:
-    return cached_graph(
-        f"subopt_{n}_{k}_{seed}_{n_iter}",
-        lambda: search.symmetric_sa_search(n, k, seed=seed, n_iter=n_iter, fold=fold).graph)
+    """Large-N suboptimal graph: circulant warm start + orbit-SA polish
+    (falls back to the pure symmetric walk if the polish path degrades)."""
+
+    def build() -> Graph:
+        res = search.large_search(n, k, seed=seed, budget=max(400, n_iter // 3), fold=fold)
+        sym = search.symmetric_sa_search(n, k, seed=seed, n_iter=n_iter, fold=fold)
+        return (res if (res.mpl, res.diameter) <= (sym.mpl, sym.diameter) else sym).graph
+
+    return cached_graph(f"subopt_{n}_{k}_{seed}_{n_iter}", build)
 
 
 # ------------------------------------------------------------------------------

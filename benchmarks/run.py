@@ -2,15 +2,24 @@
 ``name,us_per_call,derived`` CSV rows and saves JSON under results/benchmarks/.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig4,...]
+    python benchmarks/run.py --smoke        # CI: fast subset + BENCH_*.json
 """
 import argparse
+import os
 import sys
 import time
 
-from . import (fig2_pingpong, fig3_pingpong_ratios, fig4_collectives, fig5_beff,
-               fig6_ffte, fig7_graph500, fig8_npb, fig10_large_sim, roofline,
-               table1_graph_properties, table2_3_dragonfly, table4_large_scale,
-               table5_6_large_dragonfly, topology_term)
+if __package__ in (None, ""):  # executed as a script: bootstrap the paths
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _REPO)
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from benchmarks import (bench_search, fig2_pingpong, fig3_pingpong_ratios,
+                        fig4_collectives, fig5_beff, fig6_ffte, fig7_graph500,
+                        fig8_npb, fig10_large_sim, roofline,
+                        table1_graph_properties, table2_3_dragonfly,
+                        table4_large_scale, table5_6_large_dragonfly,
+                        topology_term)
 
 MODULES = {
     "table1": table1_graph_properties,
@@ -27,18 +36,34 @@ MODULES = {
     "fig10": fig10_large_sim,
     "roofline": roofline,
     "topology_term": topology_term,
+    "bench_search": bench_search,
 }
+
+# fast, dependency-light subset for the CI bench-smoke job (bench_search
+# additionally honours smoke=True with reduced budgets)
+SMOKE_KEYS = ["bench_search"]
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default=None, help="comma-separated module keys")
+    p.add_argument("--smoke", action="store_true",
+                   help="fast CI subset with reduced budgets (emits BENCH_*.json)")
     args = p.parse_args(argv)
-    keys = args.only.split(",") if args.only else list(MODULES)
+    if args.only:
+        keys = args.only.split(",")  # --smoke then only reduces budgets
+    elif args.smoke:
+        keys = SMOKE_KEYS
+    else:
+        keys = list(MODULES)
+    unknown = [k for k in keys if k not in MODULES]
+    if unknown:
+        p.error(f"unknown module(s) {unknown}; choose from {sorted(MODULES)}")
     print("name,us_per_call,derived")
     for k in keys:
         t0 = time.time()
-        rows = MODULES[k].run()
+        mod = MODULES[k]
+        rows = mod.run(smoke=True) if args.smoke and k == "bench_search" else mod.run()
         rows.emit()
         rows.save()
         print(f"# {k} done in {time.time()-t0:.1f}s", file=sys.stderr)

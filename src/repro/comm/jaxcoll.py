@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.graphs import Graph
 from ..core import collectives as C
 
@@ -59,7 +60,10 @@ def ring_perm(n: int, order: Sequence[int] | None = None, reverse: bool = False)
 
 
 def _axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    # jax < 0.5: psum of a python scalar is folded to the static axis size
+    return jax.lax.psum(1, axis_name)
 
 
 def _my_ring_index(axis_name: str, order: Sequence[int] | None, n: int) -> jax.Array:
@@ -227,11 +231,10 @@ def run_on_axis(fn, mesh: Mesh, axis: str, *args):
         out = fn(*[x[0] for x in xs], axis_name=axis)
         return out[None]
 
-    wrapped = jax.shard_map(
+    wrapped = shard_map(
         inner,
         mesh=mesh,
         in_specs=tuple(P(axis) for _ in args),
         out_specs=P(axis),
-        check_vma=False,
     )
     return wrapped(*args)

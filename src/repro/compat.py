@@ -1,0 +1,36 @@
+"""Cross-version jax shims.
+
+The repo is exercised against both the pinned CI jax and older 0.4.x
+installs; the shard_map entry point and its check kwarg moved between those
+lines (``jax.experimental.shard_map.shard_map(check_rep=...)`` →
+``jax.shard_map(check_vma=...)``).  Routing every call through here keeps the
+rest of the codebase on one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "peak_memory_bytes"]
+
+
+def peak_memory_bytes(memory_stats) -> int:
+    """CompiledMemoryStats.peak_memory_in_bytes, or a conservative
+    argument+output+temp estimate on older jaxlib builds without that field."""
+    peak = getattr(memory_stats, "peak_memory_in_bytes", 0)
+    if peak:
+        return int(peak)
+    return int(memory_stats.argument_size_in_bytes
+               + memory_stats.output_size_in_bytes
+               + memory_stats.temp_size_in_bytes)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+else:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=False)

@@ -1,0 +1,580 @@
+"""Optional C fast path for the incremental APSP evaluator.
+
+The search hot loop is queue-BFS + O(n^2) patching — element-wise work that
+numpy can only express as dense matmuls (O(n^3) per full recompute) plus
+dozens of small-array calls.  This module compiles a tiny dependency-free C
+kernel at first use (plain ``cc -O3 -shared``, no Python headers needed),
+caches the shared object under the system temp dir keyed by source hash, and
+exposes it via ctypes.  Everything degrades gracefully: if no compiler is
+available (or ``REPRO_FASTPATH=0`` is set) callers fall back to the pure
+numpy implementation in ``metrics.py`` — results are bit-identical either
+way (asserted by the property tests).
+"""
+from __future__ import annotations
+
+import ctypes
+import hashlib
+import os
+import subprocess
+import tempfile
+
+import numpy as np
+
+__all__ = ["get_lib", "FastEval"]
+
+_C_SOURCE = r"""
+#include <stdint.h>
+#include <string.h>
+
+/* BFS from src over padded neighbour table nbr[n*kmax] (pad < 0), skipping
+   edges (sa[t], sb[t]) and additionally traversing extra edges (xa[t], xb[t]).
+   row[] gets hop distances, sentinel n for unreachable. */
+static inline int is_endpoint(int u, const int32_t* ea, const int32_t* eb, int ne)
+{
+    for (int t = 0; t < ne; t++)
+        if (u == ea[t] || u == eb[t]) return 1;
+    return 0;
+}
+
+static void bfs_one(int n, int kmax, const int32_t* nbr,
+                    const int32_t* sa, const int32_t* sb, int nskip,
+                    const int32_t* xa, const int32_t* xb, int nextra,
+                    int src, int32_t* row, int32_t* queue)
+{
+    for (int i = 0; i < n; i++) row[i] = n;
+    row[src] = 0;
+    int head = 0, tail = 0;
+    queue[tail++] = src;
+    while (head < tail) {
+        int u = queue[head++];
+        int32_t du = row[u];
+        const int32_t* nb = nbr + (size_t)u * kmax;
+        /* removed/added edges are incident only to their endpoints: the
+           filter loops are needed only when u is one of those vertices */
+        int ue = (nskip && is_endpoint(u, sa, sb, nskip)) ||
+                 (nextra && is_endpoint(u, xa, xb, nextra));
+        if (!ue) {
+            for (int j = 0; j < kmax; j++) {
+                int v = nb[j];
+                if (v >= 0 && row[v] == n) { row[v] = du + 1; queue[tail++] = v; }
+            }
+            continue;
+        }
+        for (int j = 0; j < kmax; j++) {
+            int v = nb[j];
+            if (v < 0) continue;
+            int skip = 0;
+            for (int t = 0; t < nskip; t++)
+                if ((u == sa[t] && v == sb[t]) || (u == sb[t] && v == sa[t])) { skip = 1; break; }
+            if (skip) continue;
+            if (row[v] == n) { row[v] = du + 1; queue[tail++] = v; }
+        }
+        for (int t = 0; t < nextra; t++) {
+            int v = -1;
+            if (u == xa[t]) v = xb[t];
+            else if (u == xb[t]) v = xa[t];
+            if (v >= 0 && row[v] == n) { row[v] = du + 1; queue[tail++] = v; }
+        }
+    }
+}
+
+/* All-pairs hop distances into out[n*n]. queue: scratch of n ints. */
+void apsp_rows(int n, int kmax, const int32_t* nbr, int32_t* out, int32_t* queue)
+{
+    for (int s = 0; s < n; s++)
+        bfs_one(n, kmax, nbr, 0, 0, 0, 0, 0, 0, s, out + (size_t)s * n, queue);
+}
+
+/* npar[s*n+x] = #neighbours w of x with dist[s*n+w] + 1 == dist[s*n+x]. */
+void parent_counts(int n, int kmax, const int32_t* nbr, const int32_t* dist, int16_t* npar)
+{
+    for (int s = 0; s < n; s++) {
+        const int32_t* ds = dist + (size_t)s * n;
+        int16_t* ps = npar + (size_t)s * n;
+        for (int x = 0; x < n; x++) {
+            int32_t dx = ds[x];
+            const int32_t* nb = nbr + (size_t)x * kmax;
+            int c = 0;
+            for (int j = 0; j < kmax; j++) {
+                int w = nb[j];
+                if (w >= 0 && ds[w] + 1 == dx) c++;
+            }
+            ps[x] = (int16_t)c;
+        }
+    }
+}
+
+static inline int edge_in(int x, int y, const int32_t* ea, const int32_t* eb, int ne)
+{
+    for (int t = 0; t < ne; t++)
+        if ((x == ea[t] && y == eb[t]) || (x == eb[t] && y == ea[t])) return 1;
+    return 0;
+}
+
+/* Ramalingam-Reps style repair of one source row after deleting the edges
+   (ra[t], rb[t]): phase 1 cascades sole-parent invalidations from the
+   endpoints (touching only damaged vertices), phase 2 Bellman-raises the
+   invalidated set against the valid boundary.  row holds pre-removal
+   distances in, exact post-removal distances out.  Returns #invalidated. */
+/* #parents of y w.r.t. the distances in row (on-the-fly variant used when no
+   maintained npar matrix is available). */
+static inline int16_t count_parents(int n, int kmax, const int32_t* nbr,
+                                    const int32_t* row, int y)
+{
+    const int32_t* nb = nbr + (size_t)y * kmax;
+    int32_t dy = row[y];
+    int16_t c = 0;
+    for (int j = 0; j < kmax; j++) {
+        int w = nb[j];
+        if (w >= 0 && row[w] + 1 == dy) c++;
+    }
+    return c;
+}
+
+/* pc/state are epoch-stamped (stamp[y] == gen means initialised for this
+   call): no per-source memcpy/memset, O(touched) setup instead of O(n).
+   npar_row may be NULL -> counts are derived from the row itself. */
+static inline void pc_touch(int n, int kmax, const int32_t* nbr, int y,
+                            const int16_t* npar_row, const int32_t* row,
+                            int16_t* pc, unsigned char* state,
+                            int32_t* stamp, int32_t gen)
+{
+    if (stamp[y] != gen) {
+        stamp[y] = gen;
+        pc[y] = npar_row ? npar_row[y] : count_parents(n, kmax, nbr, row, y);
+        state[y] = 0;
+    }
+}
+
+static int cascade_repair(int n, int kmax, const int32_t* nbr,
+                          const int16_t* npar_row, int32_t* row,
+                          const int32_t* ra, const int32_t* rb, int nrem,
+                          int32_t* queue, int16_t* pc, unsigned char* state,
+                          int32_t* oldvals, int32_t* stamp, int32_t gen)
+{
+    int tail = 0;
+    for (int t = 0; t < nrem; t++) {
+        int a = ra[t], b = rb[t];
+        pc_touch(n, kmax, nbr, a, npar_row, row, pc, state, stamp, gen);
+        pc_touch(n, kmax, nbr, b, npar_row, row, pc, state, stamp, gen);
+        if (row[a] + 1 == row[b] && !state[b] && --pc[b] == 0) { state[b] = 1; queue[tail++] = b; }
+        if (row[b] + 1 == row[a] && !state[a] && --pc[a] == 0) { state[a] = 1; queue[tail++] = a; }
+    }
+    for (int head = 0; head < tail; head++) {
+        int x = queue[head];
+        const int32_t* nb = nbr + (size_t)x * kmax;
+        int xe = is_endpoint(x, ra, rb, nrem);
+        for (int j = 0; j < kmax; j++) {
+            int y = nb[j];
+            if (y < 0) continue;
+            if (xe && edge_in(x, y, ra, rb, nrem)) continue;  /* counted at init */
+            pc_touch(n, kmax, nbr, y, npar_row, row, pc, state, stamp, gen);
+            if (state[y]) continue;
+            if (row[x] + 1 == row[y] && --pc[y] == 0) { state[y] = 1; queue[tail++] = y; }
+        }
+    }
+    int ninv = tail;
+    for (int i = 0; i < ninv; i++) { oldvals[i] = row[queue[i]]; row[queue[i]] = n; }
+    int changed = 1;
+    while (changed) {
+        changed = 0;
+        for (int i = 0; i < ninv; i++) {
+            int x = queue[i];
+            const int32_t* nb = nbr + (size_t)x * kmax;
+            int xe = is_endpoint(x, ra, rb, nrem);
+            int32_t best = n;
+            for (int j = 0; j < kmax; j++) {
+                int y = nb[j];
+                if (y < 0 || (xe && edge_in(x, y, ra, rb, nrem))) continue;
+                int32_t cand = row[y] + 1;
+                if (cand < best) best = cand;
+            }
+            if (best < row[x]) { row[x] = best; changed = 1; }
+        }
+    }
+    return ninv;
+}
+
+/* Evaluate a 2-out / 2-in edge swap.
+   rem = [a,b,c,d] removed edges (a,b),(c,d); add likewise.
+   dist is the current matrix (sentinel n); npar its parent counts;
+   base_total its sum (for incremental accounting on the delta path).
+   Writes the exact post-swap matrix into newdist; total_out gets the exact
+   new sum; max_out gets the exact new max, or -1 when want_max == 0 and
+   the delta path proved the graph stayed connected (callers compute the
+   diameter lazily on commit).  Returns the number of removal-affected
+   sources, or -1 if the full-rebuild path ran.
+   scratch: 8n int32, ZERO-INITIALISED at allocation (queue, aff, cols,
+   oldvals, pc, state+affmask, stamp, gen counter). */
+int32_t eval_swap(int n, int kmax, const int32_t* nbr,
+                  const int32_t* dist, const int16_t* npar,
+                  const int32_t* rem, const int32_t* add,
+                  int force_full, double full_frac, int want_max,
+                  int64_t base_total,
+                  int32_t* newdist, int64_t* total_out, int32_t* max_out,
+                  int32_t* scratch)
+{
+    int32_t* queue = scratch;
+    int32_t* aff = scratch + n;
+    int32_t* cols = scratch + 2 * n;
+    int32_t* oldvals = scratch + 3 * n;
+    int16_t* pc = (int16_t*)(scratch + 4 * n);
+    unsigned char* state = (unsigned char*)(scratch + 5 * n);
+    unsigned char* affmask = state + n;  /* n + n bytes <= 4n bytes of slot 5 */
+    int32_t* stamp = scratch + 6 * n;
+    int32_t* genp = scratch + 7 * n;
+    const int32_t rem_a[2] = { rem[0], rem[2] }, rem_b[2] = { rem[1], rem[3] };
+    const int32_t add_a[2] = { add[0], add[2] }, add_b[2] = { add[1], add[3] };
+    int naff = 0;
+    int full = force_full;
+    if (!full) {
+        for (int s = 0; s < n; s++) {
+            const int32_t* ds = dist + (size_t)s * n;
+            const int16_t* ps = npar ? npar + (size_t)s * n : 0;
+            int hit = 0;
+            for (int e = 0; e < 2 && !hit; e++) {
+                int a = rem_a[e], b = rem_b[e];
+                int32_t da = ds[a], db = ds[b];
+                if (da + 1 == db &&
+                    (ps ? ps[b] : count_parents(n, kmax, nbr, ds, b)) == 1) hit = 1;
+                else if (db + 1 == da &&
+                    (ps ? ps[a] : count_parents(n, kmax, nbr, ds, a)) == 1) hit = 1;
+            }
+            if (hit) aff[naff++] = s;
+        }
+        if (naff > full_frac * n) full = 1;
+    }
+
+    if (full) {
+        for (int s = 0; s < n; s++)
+            bfs_one(n, kmax, nbr, rem_a, rem_b, 2, add_a, add_b, 2,
+                    s, newdist + (size_t)s * n, queue);
+        int64_t tot = 0;
+        int32_t mx = 0;
+        const size_t nn = (size_t)n * n;
+        for (size_t i = 0; i < nn; i++) {
+            tot += newdist[i];
+            if (newdist[i] > mx) mx = newdist[i];
+        }
+        *total_out = tot;
+        *max_out = mx;
+        return -1;
+    }
+
+    memcpy(newdist, dist, (size_t)n * n * sizeof(int32_t));
+    memset(affmask, 0, (size_t)n);
+    for (int i = 0; i < naff; i++) affmask[aff[i]] = 1;
+    int64_t dr_all = 0, dr_affaff = 0;
+    int has_sent = 0;
+    /* phase 1: repair removal-affected rows on G minus removed edges */
+    for (int i = 0; i < naff; i++) {
+        int s = aff[i];
+        int32_t* row = newdist + (size_t)s * n;
+        if (++*genp <= 0) { memset(stamp, 0, (size_t)n * sizeof(int32_t)); *genp = 1; }
+        int ninv = cascade_repair(n, kmax, nbr,
+                                  npar ? npar + (size_t)s * n : 0, row,
+                                  rem_a, rem_b, 2, queue, pc, state, oldvals,
+                                  stamp, *genp);
+        for (int t = 0; t < ninv; t++) {
+            int x = queue[t];
+            int64_t d = row[x] - oldvals[t];
+            dr_all += d;
+            if (affmask[x]) dr_affaff += d;
+            if (row[x] >= n) has_sent = 1;
+        }
+    }
+    for (int i = 0; i < naff; i++) {     /* mirror rows into columns */
+        int s = aff[i];
+        const int32_t* rs = newdist + (size_t)s * n;
+        for (int x = 0; x < n; x++) newdist[(size_t)x * n + s] = rs[x];
+    }
+    int64_t tot = base_total + 2 * dr_all - dr_affaff;
+    /* phase 2: exact unweighted edge-insert formula per added edge.  Rows x
+       with |d(x,u) - d(x,v)| <= 1 provably cannot improve (triangle
+       inequality through the closer endpoint) and are skipped. */
+    for (int e = 0; e < 2; e++) {
+        int u = add_a[e], v = add_b[e];
+        int32_t* du = queue;   /* snapshot columns: formula needs pre-edge base */
+        int32_t* dv = cols;
+        for (int x = 0; x < n; x++) {
+            du[x] = newdist[(size_t)x * n + u];
+            dv[x] = newdist[(size_t)x * n + v];
+        }
+        for (int x = 0; x < n; x++) {
+            int32_t dxu = du[x], dxv = dv[x];
+            int32_t diff = dxu - dxv;
+            if (diff <= 1 && diff >= -1) continue;
+            int32_t* rowx = newdist + (size_t)x * n;
+            /* branchless min-store (auto-vectorizes); account the total via
+               row sums instead of per-element deltas */
+            int64_t before = 0, after = 0;
+            for (int y = 0; y < n; y++) before += rowx[y];
+            for (int y = 0; y < n; y++) {
+                int32_t c1 = dxu + 1 + dv[y];
+                int32_t c2 = dxv + 1 + du[y];
+                int32_t c = c1 < c2 ? c1 : c2;
+                rowx[y] = c < rowx[y] ? c : rowx[y];
+            }
+            for (int y = 0; y < n; y++) after += rowx[y];
+            tot += after - before;
+        }
+    }
+    *total_out = tot;
+    if (want_max || has_sent) {
+        int64_t tot2 = 0;
+        int32_t mx = 0;
+        const size_t nn = (size_t)n * n;
+        for (size_t i = 0; i < nn; i++) {
+            tot2 += newdist[i];
+            if (newdist[i] > mx) mx = newdist[i];
+        }
+        *total_out = tot2;
+        *max_out = mx;
+    } else {
+        *max_out = -1;  /* connected; diameter deferred */
+    }
+    return naff;
+}
+"""
+
+_C_SOURCE += r"""
+#include <math.h>
+
+static void rebuild_nbr_row(int n, int kmax, const unsigned char* adj, int32_t* nbr, int u)
+{
+    const unsigned char* row = adj + (size_t)u * n;
+    int32_t* out = nbr + (size_t)u * kmax;
+    int j = 0;
+    for (int v = 0; v < n; v++)
+        if (row[v]) out[j++] = v;
+    for (; j < kmax; j++) out[j] = -1;
+}
+
+/* One chunk of the simulated-annealing inner loop, entirely in C.
+
+   All randomness is pre-drawn by the caller (de1/de2 = chord indices,
+   dorient = 0/1, du = uniform accept draws, one each per iteration), so a
+   pure-python fallback consuming the same arrays follows a bit-identical
+   trajectory.  State (dist/npar/nbr/adj/chords/t/cur/best) is updated in
+   place; returns the number of iterations executed (< chunk_iters only on
+   target hit).
+
+   hist_io: [capacity, count]; improvements append (iter, total) pairs.
+   stats_io: [accepted, n_delta, n_full, invalid] accumulated. */
+int32_t sa_chunk(int n, int kmax,
+                 int32_t* nbr, int32_t* dist, int16_t* npar,
+                 unsigned char* adj, unsigned char* best_adj,
+                 int32_t* chords, int32_t m_c,
+                 int32_t chunk_iters, int32_t iter_base,
+                 const int32_t* de1, const int32_t* de2,
+                 const int32_t* dorient, const double* du,
+                 double* t_io, double gamma, double full_frac,
+                 int64_t* cur_total_io, int32_t* cur_diam_io,
+                 int64_t* best_total_io, int32_t* best_diam_io,
+                 int64_t target_total,
+                 int32_t* hist_iters, int64_t* hist_totals, int32_t* hist_io,
+                 int32_t* newdist, int32_t* scratch, int64_t* stats_io)
+{
+    const double norm = (double)n * (n - 1);
+    double t = *t_io;
+    int64_t cur_total = *cur_total_io;
+    int32_t cur_diam = *cur_diam_io;
+    int64_t best_total = *best_total_io;
+    int32_t best_diam = *best_diam_io;
+    const size_t nn = (size_t)n * n;
+    int32_t* cur_dist = dist;      /* accepted state: buffers swap roles */
+    int32_t* prop_dist = newdist;
+    int32_t it = 0;
+    for (; it < chunk_iters; it++) {
+        double t_next = t * gamma;  /* seed semantics: decay before accept */
+        int e1 = de1[it], e2 = de2[it];
+        t = t_next;
+        if (e1 == e2) { stats_io[3]++; continue; }
+        int a = chords[2 * e1], b = chords[2 * e1 + 1];
+        int c = chords[2 * e2], d = chords[2 * e2 + 1];
+        if (a == c || a == d || b == c || b == d) { stats_io[3]++; continue; }
+        int p1a, p1b, p2a, p2b;
+        if (dorient[it]) { p1a = a; p1b = c; p2a = b; p2b = d; }
+        else             { p1a = a; p1b = d; p2a = b; p2b = c; }
+        if (adj[(size_t)p1a * n + p1b] || adj[(size_t)p2a * n + p2b]) { stats_io[3]++; continue; }
+        int32_t rem[4] = { a, b, c, d };
+        int32_t add[4] = { p1a, p1b, p2a, p2b };
+        int64_t total;
+        int32_t mx;
+        int32_t naff = eval_swap(n, kmax, nbr, cur_dist, npar, rem, add,
+                                 0, full_frac, 0, cur_total,
+                                 prop_dist, &total, &mx, scratch);
+        if (naff < 0) stats_io[2]++; else stats_io[1]++;
+        if (mx >= n) continue;  /* disconnected: dm = +inf, always rejected */
+        double dm = (double)(total - cur_total) / norm;
+        if (!(dm < 0.0)) {
+            double tt = t > 1e-12 ? t : 1e-12;
+            if (!(du[it] < exp(-dm / tt))) continue;
+        }
+        /* commit: swap the distance buffers instead of copying 4n^2 bytes */
+        { int32_t* tmp = cur_dist; cur_dist = prop_dist; prop_dist = tmp; }
+        adj[(size_t)a * n + b] = adj[(size_t)b * n + a] = 0;
+        adj[(size_t)c * n + d] = adj[(size_t)d * n + c] = 0;
+        adj[(size_t)p1a * n + p1b] = adj[(size_t)p1b * n + p1a] = 1;
+        adj[(size_t)p2a * n + p2b] = adj[(size_t)p2b * n + p2a] = 1;
+        rebuild_nbr_row(n, kmax, adj, nbr, a);
+        rebuild_nbr_row(n, kmax, adj, nbr, b);
+        rebuild_nbr_row(n, kmax, adj, nbr, c);
+        rebuild_nbr_row(n, kmax, adj, nbr, d);
+        if (npar) parent_counts(n, kmax, nbr, cur_dist, npar);
+        chords[2 * e1] = p1a; chords[2 * e1 + 1] = p1b;
+        chords[2 * e2] = p2a; chords[2 * e2 + 1] = p2b;
+        cur_total = total;
+        cur_diam = 0;
+        for (size_t i = 0; i < nn; i++)
+            if (cur_dist[i] > cur_diam) cur_diam = cur_dist[i];
+        stats_io[0]++;
+        if (cur_total < best_total || (cur_total == best_total && cur_diam < best_diam)) {
+            best_total = cur_total;
+            best_diam = cur_diam;
+            memcpy(best_adj, adj, nn);
+            if (hist_io[1] < hist_io[0]) {
+                hist_iters[hist_io[1]] = iter_base + it;
+                hist_totals[hist_io[1]] = cur_total;
+                hist_io[1]++;
+            }
+            if (target_total >= 0 && best_total <= target_total) { it++; break; }
+        }
+    }
+    if (cur_dist != dist)  /* odd number of accepts: settle into caller's buffer */
+        memcpy(dist, cur_dist, nn * sizeof(int32_t));
+    *t_io = t;
+    *cur_total_io = cur_total;
+    *cur_diam_io = cur_diam;
+    *best_total_io = best_total;
+    *best_diam_io = best_diam;
+    return it;
+}
+"""
+
+_lib = None
+_lib_tried = False
+
+
+def _compile() -> ctypes.CDLL | None:
+    tag = hashlib.sha1(_C_SOURCE.encode()).hexdigest()[:16]
+    cache = os.path.join(tempfile.gettempdir(), f"repro_fastpath_{tag}.so")
+    if not os.path.exists(cache):
+        src = cache[:-3] + ".c"
+        with open(src, "w") as f:
+            f.write(_C_SOURCE)
+        cc = os.environ.get("CC", "cc")
+        tmp = cache + f".tmp{os.getpid()}"
+        base = [cc, "-O3", "-shared", "-fPIC", src, "-o", tmp]
+        try:
+            subprocess.run(base[:1] + ["-march=native"] + base[1:],
+                           check=True, capture_output=True, timeout=120)
+        except (subprocess.CalledProcessError, OSError):
+            subprocess.run(base, check=True, capture_output=True, timeout=120)
+        os.replace(tmp, cache)  # atomic: concurrent builders race safely
+    lib = ctypes.CDLL(cache)
+    i32p = ctypes.POINTER(ctypes.c_int32)
+    i16p = ctypes.POINTER(ctypes.c_int16)
+    i64p = ctypes.POINTER(ctypes.c_int64)
+    lib.apsp_rows.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i32p]
+    lib.apsp_rows.restype = None
+    lib.parent_counts.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i16p]
+    lib.parent_counts.restype = None
+    lib.eval_swap.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i16p,
+                              i32p, i32p, ctypes.c_int, ctypes.c_double,
+                              ctypes.c_int, ctypes.c_int64,
+                              i32p, i64p, i32p, i32p]
+    lib.eval_swap.restype = ctypes.c_int32
+    u8p = ctypes.POINTER(ctypes.c_uint8)
+    f64p = ctypes.POINTER(ctypes.c_double)
+    lib.sa_chunk.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i16p,
+                             u8p, u8p, i32p, ctypes.c_int32,
+                             ctypes.c_int32, ctypes.c_int32,
+                             i32p, i32p, i32p, f64p,
+                             f64p, ctypes.c_double, ctypes.c_double,
+                             i64p, i32p, i64p, i32p, ctypes.c_int64,
+                             i32p, i64p, i32p, i32p, i32p, i64p]
+    lib.sa_chunk.restype = ctypes.c_int32
+    return lib
+
+
+def get_lib() -> ctypes.CDLL | None:
+    """The compiled kernel, or None when unavailable (numpy fallback)."""
+    global _lib, _lib_tried
+    if _lib_tried:
+        return _lib
+    _lib_tried = True
+    if os.environ.get("REPRO_FASTPATH", "1") == "0":
+        return None
+    try:
+        _lib = _compile()
+    except Exception:
+        _lib = None
+    return _lib
+
+
+def _ptr(a: np.ndarray, ctype):
+    return a.ctypes.data_as(ctypes.POINTER(ctype))
+
+
+class FastEval:
+    """ctypes adapter: numpy arrays in, kernel calls out."""
+
+    def __init__(self, lib: ctypes.CDLL):
+        self.lib = lib
+
+    def apsp_rows(self, nbr: np.ndarray, out: np.ndarray, scratch: np.ndarray) -> None:
+        n, kmax = nbr.shape
+        self.lib.apsp_rows(n, kmax, _ptr(nbr, ctypes.c_int32),
+                           _ptr(out, ctypes.c_int32), _ptr(scratch, ctypes.c_int32))
+
+    def parent_counts(self, nbr: np.ndarray, dist: np.ndarray, npar: np.ndarray) -> None:
+        n, kmax = nbr.shape
+        self.lib.parent_counts(n, kmax, _ptr(nbr, ctypes.c_int32),
+                               _ptr(dist, ctypes.c_int32), _ptr(npar, ctypes.c_int16))
+
+    def eval_swap(self, nbr, dist, npar, rem, add, force_full, full_frac,
+                  want_max, base_total, newdist, scratch) -> tuple[int, int, int]:
+        """Returns (naff, total, max) — max is -1 when deferred."""
+        n, kmax = nbr.shape
+        total = ctypes.c_int64()
+        mx = ctypes.c_int32()
+        naff = self.lib.eval_swap(
+            n, kmax, _ptr(nbr, ctypes.c_int32), _ptr(dist, ctypes.c_int32),
+            _ptr(npar, ctypes.c_int16), _ptr(rem, ctypes.c_int32),
+            _ptr(add, ctypes.c_int32), int(force_full), float(full_frac),
+            int(want_max), int(base_total),
+            _ptr(newdist, ctypes.c_int32), ctypes.byref(total), ctypes.byref(mx),
+            _ptr(scratch, ctypes.c_int32))
+        return int(naff), int(total.value), int(mx.value)
+
+    def sa_chunk(self, *, nbr, dist, npar, adj, best_adj, chords,
+                 chunk_iters, iter_base, de1, de2, dorient, du,
+                 t, gamma, full_frac, cur_total, cur_diam,
+                 best_total, best_diam, target_total,
+                 hist_iters, hist_totals, hist_io,
+                 newdist, scratch, stats) -> dict:
+        """Run a chunk of SA iterations in C; returns the updated scalars."""
+        n, kmax = nbr.shape
+        t_c = ctypes.c_double(t)
+        cur_t = ctypes.c_int64(cur_total)
+        cur_d = ctypes.c_int32(cur_diam)
+        best_t = ctypes.c_int64(best_total)
+        best_d = ctypes.c_int32(best_diam)
+        done = self.lib.sa_chunk(
+            n, kmax, _ptr(nbr, ctypes.c_int32), _ptr(dist, ctypes.c_int32),
+            None if npar is None else _ptr(npar, ctypes.c_int16),
+            _ptr(adj, ctypes.c_uint8),
+            _ptr(best_adj, ctypes.c_uint8), _ptr(chords, ctypes.c_int32),
+            chords.shape[0], int(chunk_iters), int(iter_base),
+            _ptr(de1, ctypes.c_int32), _ptr(de2, ctypes.c_int32),
+            _ptr(dorient, ctypes.c_int32), _ptr(du, ctypes.c_double),
+            ctypes.byref(t_c), float(gamma), float(full_frac),
+            ctypes.byref(cur_t), ctypes.byref(cur_d),
+            ctypes.byref(best_t), ctypes.byref(best_d), int(target_total),
+            _ptr(hist_iters, ctypes.c_int32), _ptr(hist_totals, ctypes.c_int64),
+            _ptr(hist_io, ctypes.c_int32), _ptr(newdist, ctypes.c_int32),
+            _ptr(scratch, ctypes.c_int32), _ptr(stats, ctypes.c_int64))
+        return {"done": int(done), "t": t_c.value,
+                "cur_total": int(cur_t.value), "cur_diam": int(cur_d.value),
+                "best_total": int(best_t.value), "best_diam": int(best_d.value)}

@@ -7,12 +7,16 @@ via boolean matmul, comfortably fast for the paper's N ≤ 1024.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from .graphs import Graph
 
 __all__ = [
     "apsp",
+    "apsp_hops",
+    "IncrementalAPSP",
     "mpl",
     "diameter",
     "eccentricities",
@@ -49,6 +53,336 @@ def apsp(g: Graph) -> np.ndarray:
 
 def is_connected(g: Graph) -> bool:
     return bool(np.isfinite(apsp(g)).all())
+
+
+# --------------------------------------------------------------------------------
+# Incremental APSP under 2-edge swaps (the search engine's hot path)
+# --------------------------------------------------------------------------------
+
+def _bfs_rows(a32: np.ndarray, sources: np.ndarray, sentinel: int) -> np.ndarray:
+    """Hop distances from ``sources`` via frontier BFS over float32 matmuls.
+
+    Returns an int32 (len(sources), n) matrix; unreachable = ``sentinel``.
+    """
+    n = a32.shape[0]
+    s = len(sources)
+    dist = np.full((s, n), sentinel, dtype=np.int32)
+    reach = np.zeros((s, n), dtype=bool)
+    dist[np.arange(s), sources] = 0
+    reach[np.arange(s), sources] = True
+    frontier = reach.astype(np.float32)
+    d = 0
+    while True:
+        nxt = (frontier @ a32) > 0
+        newf = nxt & ~reach
+        if not newf.any():
+            break
+        d += 1
+        dist[newf] = d
+        reach |= newf
+        frontier = newf.astype(np.float32)
+    return dist
+
+
+def apsp_hops(adj: np.ndarray, sentinel: int | None = None) -> np.ndarray:
+    """All-pairs hop distances from a boolean adjacency as int32.
+
+    Unreachable pairs hold ``sentinel`` (default n, one more than any real
+    distance) so delta tests stay in integer arithmetic.
+    """
+    n = adj.shape[0]
+    return _bfs_rows(adj.astype(np.float32), np.arange(n), sentinel if sentinel is not None else n)
+
+
+def _parent_counts(adj: np.ndarray, dist: np.ndarray) -> np.ndarray:
+    """npar[s, x] = number of BFS-DAG parents of x w.r.t. source s.
+
+    A neighbour w of x is a parent when dist[s, w] + 1 == dist[s, x].  Used
+    for the exact edge-removal test: deleting edge (a, b) changes distances
+    from s iff it is the *sole* parent edge of one endpoint.
+    """
+    n = dist.shape[0]
+    us, vs = np.nonzero(np.triu(adj))
+    npar = np.zeros((n, n), dtype=np.int16)
+    du = dist[:, us]
+    dv = dist[:, vs]
+    npar_t = npar.T
+    np.add.at(npar_t, vs, (du + 1 == dv).T)  # u is a parent of v
+    np.add.at(npar_t, us, (dv + 1 == du).T)  # v is a parent of u
+    return npar
+
+
+@dataclasses.dataclass
+class SwapToken:
+    """Pending result of ``IncrementalAPSP.evaluate_swap`` (commit to apply)."""
+
+    removed: tuple[tuple[int, int], ...]
+    added: tuple[tuple[int, int], ...]
+    dist: np.ndarray  # full post-swap distance matrix (int32, sentinel = n)
+    total: int
+    diam: int
+    mpl: float
+
+
+class IncrementalAPSP:
+    """Dense APSP state maintained under 2-edge swaps by delta evaluation.
+
+    The evaluator keeps the current boolean adjacency, the int32 hop-distance
+    matrix (sentinel ``n`` for unreachable) and the BFS-DAG parent-count
+    matrix.  ``evaluate_swap`` prices a swap without mutating state:
+
+    1. *Removals*: source ``s`` is affected by deleting edge (a, b) iff the
+       edge is the sole DAG-parent edge of one endpoint (exact — if an
+       endpoint keeps a parent, every vertex keeps a parent and all old
+       distances stay achievable).  Distances are repaired by batched BFS
+       from only the affected sources; unaffected rows (and, by symmetry,
+       columns) are provably unchanged.
+    2. *Additions*: the exact unweighted edge-insert formula
+       ``d'(x, y) = min(d(x, y), d(x, u) + 1 + d(v, y), d(x, v) + 1 + d(u, y))``
+       applied per added edge — vectorized O(n^2), no BFS.
+
+    When the affected-source fraction exceeds ``full_rebuild_frac`` (or
+    ``force_full`` is set) the evaluator falls back to a from-scratch batched
+    BFS; ``n_delta`` / ``n_full`` count both paths for tests and benchmarks.
+
+    A C kernel (``_fastpath``, compiled lazily when a system compiler
+    exists) replaces the numpy BFS/patch math with queue-BFS at C speed;
+    ``use_c=None`` auto-detects, ``use_c=False`` forces the numpy path.  The
+    two paths are bit-identical (asserted by the property tests).
+
+    Buffers may be caller-provided views (e.g. slices of a stacked replica
+    tensor) — all updates are written in place.
+    """
+
+    def __init__(
+        self,
+        adj: np.ndarray,
+        full_rebuild_frac: float = 0.9,
+        force_full: bool = False,
+        use_c: bool | None = None,
+        dist_buf: np.ndarray | None = None,
+        a32_buf: np.ndarray | None = None,
+        npar_buf: np.ndarray | None = None,
+    ):
+        from . import _fastpath
+
+        n = adj.shape[0]
+        self.n = n
+        self.sentinel = n
+        self.full_rebuild_frac = full_rebuild_frac
+        self.force_full = force_full
+        # bool input is adopted as the live buffer (mutated in place — pass a
+        # stacked-tensor slice to keep replicas in one array)
+        self.adj = adj if adj.dtype == np.bool_ else adj.astype(bool)
+        self.fast = None
+        if use_c or use_c is None:
+            lib = _fastpath.get_lib()
+            if lib is not None:
+                self.fast = _fastpath.FastEval(lib)
+            elif use_c:
+                raise RuntimeError("C fast path requested but unavailable")
+        self.a32 = a32_buf if a32_buf is not None else np.empty((n, n), dtype=np.float32)
+        self.a32[...] = self.adj
+        # zero-init required: the C kernel epoch-stamps part of this buffer
+        self._scratch = np.zeros(8 * n, dtype=np.int32)
+        self._rem_buf = np.empty(4, dtype=np.int32)
+        self._add_buf = np.empty(4, dtype=np.int32)
+        self.nbr = self._build_nbr()
+        self.dist = dist_buf if dist_buf is not None else np.empty((n, n), dtype=np.int32)
+        self.npar = npar_buf if npar_buf is not None else np.empty((n, n), dtype=np.int16)
+        if self.fast is not None:
+            self.fast.apsp_rows(self.nbr, self.dist, self._scratch)
+            self.fast.parent_counts(self.nbr, self.dist, self.npar)
+        else:
+            self.dist[...] = _bfs_rows(self.a32, np.arange(n), n)
+            self.npar[...] = _parent_counts(self.adj, self.dist)
+        self.total = int(self.dist.sum(dtype=np.int64))
+        self.diam = int(self.dist.max())
+        self.n_delta = 0
+        self.n_full = 0
+
+    def _build_nbr(self, kmax: int | None = None) -> np.ndarray:
+        """Padded (n, kmax) neighbour table for the C kernel (pad -1)."""
+        deg = self.adj.sum(1)
+        kmax = kmax or max(1, int(deg.max()))
+        nbr = np.full((self.n, kmax), -1, dtype=np.int32)
+        for u in range(self.n):
+            ws = np.nonzero(self.adj[u])[0]
+            nbr[u, : len(ws)] = ws
+        return nbr
+
+    def _refresh_nbr_rows(self, verts) -> None:
+        for u in set(verts):
+            ws = np.nonzero(self.adj[u])[0]
+            if len(ws) > self.nbr.shape[1]:
+                self.nbr = self._build_nbr(kmax=int(self.adj.sum(1).max()))
+                return
+            self.nbr[u, :] = -1
+            self.nbr[u, : len(ws)] = ws
+
+    # -- public state ------------------------------------------------------
+    @property
+    def connected(self) -> bool:
+        return self.diam < self.sentinel
+
+    def mpl(self) -> float:
+        if not self.connected:
+            return float("inf")
+        return self.total / (self.n * (self.n - 1))
+
+    def diameter(self) -> float:
+        return float(self.diam) if self.connected else float("inf")
+
+    def as_float_dist(self) -> np.ndarray:
+        """Distance matrix in the ``apsp`` convention (float, inf sentinel)."""
+        out = self.dist.astype(float)
+        out[self.dist >= self.sentinel] = np.inf
+        return out
+
+    # -- swap evaluation ---------------------------------------------------
+    def _apply_edges(self, removed, added) -> None:
+        for u, v in removed:
+            self.adj[u, v] = self.adj[v, u] = False
+            self.a32[u, v] = self.a32[v, u] = 0.0
+        for u, v in added:
+            self.adj[u, v] = self.adj[v, u] = True
+            self.a32[u, v] = self.a32[v, u] = 1.0
+
+    def _revert_edges(self, removed, added) -> None:
+        for u, v in added:
+            self.adj[u, v] = self.adj[v, u] = False
+            self.a32[u, v] = self.a32[v, u] = 0.0
+        for u, v in removed:
+            self.adj[u, v] = self.adj[v, u] = True
+            self.a32[u, v] = self.a32[v, u] = 1.0
+
+    def evaluate_swap(
+        self,
+        removed: list[tuple[int, int]],
+        added: list[tuple[int, int]],
+        want_diameter: bool = True,
+    ) -> SwapToken:
+        """Price the swap; returns a token (``commit`` applies it).
+
+        Preconditions (asserted): removed edges exist, added edges do not,
+        and no vertex appears in two removed or two added edges.  With
+        ``want_diameter=False`` the C path may defer the diameter max-pass
+        (token.diam == -1) — ``commit`` computes it lazily; hot loops that
+        only need the MPL for accept/reject use this.
+        """
+        dist, n = self.dist, self.n
+        assert all(self.adj[u, v] for u, v in removed)
+        assert all(not self.adj[u, v] for u, v in added)
+
+        if self.fast is not None and len(removed) == 2 and len(added) == 2:
+            (self._rem_buf[0], self._rem_buf[1]), (self._rem_buf[2], self._rem_buf[3]) = removed
+            (self._add_buf[0], self._add_buf[1]), (self._add_buf[2], self._add_buf[3]) = added
+            new = np.empty((n, n), dtype=np.int32)
+            # a disconnected base state invalidates the delta tests: force full
+            force = self.force_full or not self.connected
+            naff, total, diam = self.fast.eval_swap(
+                self.nbr, dist, self.npar, self._rem_buf, self._add_buf,
+                force, self.full_rebuild_frac, want_diameter, self.total,
+                new, self._scratch)
+            if naff < 0:
+                self.n_full += 1
+            else:
+                self.n_delta += 1
+            if diam == -1:
+                mpl = total / (n * (n - 1))  # delta path proved connectivity
+            else:
+                mpl = total / (n * (n - 1)) if diam < self.sentinel else float("inf")
+            return SwapToken(tuple(removed), tuple(added), new, total, diam, mpl)
+
+        # exact removal-affected sources (sole-parent test)
+        aff = np.zeros(n, dtype=bool)
+        for a, b in removed:
+            da, db = dist[:, a], dist[:, b]
+            aff |= (da + 1 == db) & (self.npar[:, b] == 1)
+            aff |= (db + 1 == da) & (self.npar[:, a] == 1)
+        n_aff = int(aff.sum())
+
+        if self.force_full or n_aff > self.full_rebuild_frac * n:
+            self.n_full += 1
+            self._apply_edges(removed, added)
+            try:
+                new = _bfs_rows(self.a32, np.arange(n), self.sentinel)
+            finally:
+                self._revert_edges(removed, added)
+            return self._token(removed, added, new)
+
+        self.n_delta += 1
+        new = dist.copy()
+        if n_aff:
+            # repair on the graph minus removed edges (additions come after)
+            for u, v in removed:
+                self.a32[u, v] = self.a32[v, u] = 0.0
+            try:
+                rows = _bfs_rows(self.a32, np.nonzero(aff)[0], self.sentinel)
+            finally:
+                for u, v in removed:
+                    self.a32[u, v] = self.a32[v, u] = 1.0
+            new[aff, :] = rows
+            new[:, aff] = rows.T
+        for u, v in added:
+            du = new[:, u]
+            dv = new[:, v]
+            via = np.minimum(du[:, None] + (dv[None, :] + np.int32(1)),
+                             dv[:, None] + (du[None, :] + np.int32(1)))
+            np.minimum(new, via, out=new)
+        return self._token(removed, added, new)
+
+    def _token(self, removed, added, new: np.ndarray) -> SwapToken:
+        total = int(new.sum(dtype=np.int64))
+        diam = int(new.max())
+        mpl = total / (self.n * (self.n - 1)) if diam < self.sentinel else float("inf")
+        return SwapToken(tuple(removed), tuple(added), new, total, diam, mpl)
+
+    def commit(self, token: SwapToken) -> None:
+        """Apply a previously evaluated swap to the maintained state."""
+        self._apply_edges(token.removed, token.added)
+        self.dist[...] = token.dist
+        self.total = token.total
+        self.diam = int(token.dist.max()) if token.diam < 0 else token.diam
+        self._refresh_nbr_rows([x for e in (*token.removed, *token.added) for x in e])
+        if self.fast is not None:
+            self.fast.parent_counts(self.nbr, self.dist, self.npar)
+        else:
+            self.npar[...] = _parent_counts(self.adj, self.dist)
+
+    def reset(self) -> None:
+        """Re-derive all state from the (externally rewritten) adjacency."""
+        self.a32[...] = self.adj
+        self.nbr = self._build_nbr()
+        if self.fast is not None:
+            self.fast.apsp_rows(self.nbr, self.dist, self._scratch)
+            self.fast.parent_counts(self.nbr, self.dist, self.npar)
+        else:
+            self.dist[...] = _bfs_rows(self.a32, np.arange(self.n), self.sentinel)
+            self.npar[...] = _parent_counts(self.adj, self.dist)
+        self.total = int(self.dist.sum(dtype=np.int64))
+        self.diam = int(self.dist.max())
+
+    def load_from(self, other: "IncrementalAPSP") -> None:
+        """Copy another evaluator's state into this one (replica exchange)."""
+        self.adj[...] = other.adj
+        self.a32[...] = other.a32
+        self.dist[...] = other.dist
+        self.npar[...] = other.npar
+        if self.nbr.shape == other.nbr.shape:
+            self.nbr[...] = other.nbr
+        else:
+            self.nbr = other.nbr.copy()
+        self.total = other.total
+        self.diam = other.diam
+
+    def verify(self) -> None:
+        """Assert internal state equals a from-scratch recompute (tests)."""
+        ref = apsp_hops(self.adj, self.sentinel)
+        assert np.array_equal(self.dist, ref), "incremental dist diverged"
+        assert self.total == int(ref.sum(dtype=np.int64))
+        assert self.diam == int(ref.max())
+        assert np.array_equal(self.npar, _parent_counts(self.adj, self.dist))
 
 
 def mpl(g: Graph, dist: np.ndarray | None = None) -> float:

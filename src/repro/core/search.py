@@ -8,16 +8,27 @@ Three search tiers, matching Section 3.1 of the paper:
    snarkhunter/genreg, whose role is exactness on small instances.
 2. ``sa_search`` — the paper's Algorithm 1: simulated annealing over
    non-ring edge swaps of a random Hamiltonian regular graph, exponential
-   cooling ``gamma = exp(log(T_end/T_start)/n_iter)``.
-3. ``circulant_search`` / ``symmetric_search`` — the rotational-symmetry
-   restricted walk used for the large graphs (256/252/264 vertices): sample
-   circulant offset sets (full rotational symmetry, Hamiltonian by
-   construction when offset 1 is included) and hillclimb on offsets.
+   cooling ``gamma = exp(log(T_end/T_start)/n_iter)``.  Rebuilt as a
+   **parallel-replica engine with incremental MPL evaluation**: R
+   independent annealing replicas (stacked state, per-replica PRNG streams,
+   periodic best-replica exchange into the worst chain; replica 0 is a
+   protected reference chain, so best-of-R is never worse than a
+   single-replica run at the same seed) price every 2-edge swap through
+   ``metrics.IncrementalAPSP`` — BFS repair only from sources whose
+   shortest-path DAG actually broke, exact O(n^2) patching for inserted
+   edges, full recompute only as a guarded fallback.
+3. ``circulant_search`` / ``symmetric_sa_search`` — the rotational-symmetry
+   restricted walks used for the large graphs (252/256/264 and now
+   512/1024 vertices): circulant offset-set hillclimb priced by an implicit
+   np.roll BFS (no graph materialisation per candidate), plus orbit-level SA
+   that can warm-start from the best circulant (``large_search``).
 
-Every function takes an explicit ``seed`` and is bit-reproducible.
-``find_optimal`` is the paper-facing driver that picks the tier by size and
-returns the best graph found within budget, together with the Cerf bounds
-so callers can report the optimality gap.
+Every function takes an explicit ``seed`` and is bit-reproducible (the
+optional C kernel and the pure-python fallback consume identical pre-drawn
+random streams, so they follow the same trajectory).  ``find_optimal`` is
+the paper-facing driver that picks the tier by size and returns the best
+graph found within budget, together with the Cerf bounds so callers can
+report the optimality gap.
 """
 from __future__ import annotations
 
@@ -35,6 +46,8 @@ __all__ = [
     "sa_search",
     "exhaustive_search",
     "circulant_search",
+    "symmetric_sa_search",
+    "large_search",
     "find_optimal",
     "sa_objective_search",
     "KNOWN_OPTIMAL_MPL",
@@ -63,6 +76,10 @@ class SearchResult:
     iterations: int
     accepted: int
     history: list[float]  # best-so-far MPL trace (sparse)
+    replicas: int = 1
+    evals_delta: int = 0  # incremental evaluations (delta path)
+    evals_full: int = 0  # full-recompute fallbacks
+    offsets: tuple[int, ...] | None = None  # circulant offsets, if applicable
 
     @property
     def mpl_gap(self) -> float:
@@ -205,6 +222,126 @@ def _edge_swap(adj: np.ndarray, ring_mask: np.ndarray, rng: np.random.Generator)
     return out
 
 
+class _Replica:
+    """One annealing chain: incremental-APSP state + chord list + best."""
+
+    __slots__ = ("ev", "chords", "best_adj", "cur_total", "cur_diam",
+                 "best_total", "best_diam", "t", "rng",
+                 "hist_iters", "hist_totals", "hist_io", "stats", "newdist")
+
+    def __init__(self, adj: np.ndarray, ring_mask: np.ndarray,
+                 t_start: float, rng: np.random.Generator, n_iter: int):
+        n = adj.shape[0]
+        self.ev = metrics.IncrementalAPSP(adj)
+        self.chords = _chord_array(adj, ring_mask)
+        self.best_adj = adj.copy()
+        self.cur_total = self.best_total = self.ev.total
+        self.cur_diam = self.best_diam = self.ev.diam
+        self.t = t_start
+        self.rng = rng
+        cap = max(n_iter, 1)
+        self.hist_iters = np.empty(cap, dtype=np.int32)
+        self.hist_totals = np.empty(cap, dtype=np.int64)
+        self.hist_io = np.asarray([cap, 0], dtype=np.int32)
+        self.stats = np.zeros(4, dtype=np.int64)  # accepted, delta, full, invalid
+        self.newdist = np.empty((n, n), dtype=np.int32)
+
+    def load_best_of(self, other: "_Replica", ring_mask: np.ndarray) -> None:
+        """Replica exchange: adopt another chain's best state as current."""
+        self.ev.adj[...] = other.best_adj
+        self.ev.reset()
+        self.chords = _chord_array(self.ev.adj, ring_mask)
+        self.cur_total, self.cur_diam = self.ev.total, self.ev.diam
+
+
+def _chord_array(adj: np.ndarray, ring_mask: np.ndarray) -> np.ndarray:
+    iu, ju = np.nonzero(np.triu(adj & ~ring_mask))
+    return np.ascontiguousarray(np.stack([iu, ju], axis=1).astype(np.int32))
+
+
+def _sa_chunk_py(rep: _Replica, n: int, de1, de2, dorient, du,
+                 gamma: float, full_frac: float, target_total: int,
+                 iter_base: int, norm: float) -> int:
+    """Pure-python mirror of the C ``sa_chunk`` (identical trajectory)."""
+    ev = rep.ev
+    done = 0
+    for i in range(len(de1)):
+        rep.t *= gamma
+        done = i + 1
+        e1, e2 = int(de1[i]), int(de2[i])
+        if e1 == e2:
+            rep.stats[3] += 1
+            continue
+        a, b = int(rep.chords[e1, 0]), int(rep.chords[e1, 1])
+        c, d = int(rep.chords[e2, 0]), int(rep.chords[e2, 1])
+        if a == c or a == d or b == c or b == d:
+            rep.stats[3] += 1
+            continue
+        p1, p2 = ((a, c), (b, d)) if dorient[i] else ((a, d), (b, c))
+        if ev.adj[p1] or ev.adj[p2]:
+            rep.stats[3] += 1
+            continue
+        tok = ev.evaluate_swap([(a, b), (c, d)], [p1, p2], want_diameter=False)
+        if tok.diam >= n:  # disconnected: dm = +inf, always rejected
+            continue
+        dm = (tok.total - rep.cur_total) / norm
+        if not dm < 0.0:
+            if not du[i] < math.exp(-dm / max(rep.t, 1e-12)):
+                continue
+        ev.commit(tok)
+        rep.chords[e1] = p1
+        rep.chords[e2] = p2
+        rep.cur_total, rep.cur_diam = tok.total, ev.diam
+        rep.stats[0] += 1
+        if (rep.cur_total, rep.cur_diam) < (rep.best_total, rep.best_diam):
+            rep.best_total, rep.best_diam = rep.cur_total, rep.cur_diam
+            rep.best_adj[...] = ev.adj
+            cnt = int(rep.hist_io[1])
+            if cnt < int(rep.hist_io[0]):
+                rep.hist_iters[cnt] = iter_base + i
+                rep.hist_totals[cnt] = rep.cur_total
+                rep.hist_io[1] = cnt + 1
+            if 0 <= target_total and rep.best_total <= target_total:
+                break
+    return done
+
+
+def _run_chunk(rep: _Replica, n: int, chunk: int, iter_base: int,
+               gamma: float, full_frac: float, target_total: int,
+               norm: float) -> int:
+    """Draw this chunk's randomness from the replica stream and execute it
+    (C kernel when compiled, python mirror otherwise — same trajectory)."""
+    m_c = max(len(rep.chords), 1)
+    ints = rep.rng.integers(0, [m_c, m_c, 2], size=(chunk, 3))
+    de1 = np.ascontiguousarray(ints[:, 0], dtype=np.int32)
+    de2 = np.ascontiguousarray(ints[:, 1], dtype=np.int32)
+    dorient = np.ascontiguousarray(ints[:, 2], dtype=np.int32)
+    du = rep.rng.random(chunk)
+    if len(rep.chords) < 2:
+        return chunk  # no swappable chords (k == 2): pure cooling
+    ev = rep.ev
+    if ev.fast is not None:
+        out = ev.fast.sa_chunk(
+            nbr=ev.nbr, dist=ev.dist, npar=None, adj=ev.adj,
+            best_adj=rep.best_adj, chords=rep.chords,
+            chunk_iters=chunk, iter_base=iter_base,
+            de1=de1, de2=de2, dorient=dorient, du=du,
+            t=rep.t, gamma=gamma, full_frac=full_frac,
+            cur_total=rep.cur_total, cur_diam=rep.cur_diam,
+            best_total=rep.best_total, best_diam=rep.best_diam,
+            target_total=target_total,
+            hist_iters=rep.hist_iters, hist_totals=rep.hist_totals,
+            hist_io=rep.hist_io, newdist=rep.newdist,
+            scratch=ev._scratch, stats=rep.stats)
+        rep.t = out["t"]
+        rep.cur_total, rep.cur_diam = out["cur_total"], out["cur_diam"]
+        rep.best_total, rep.best_diam = out["best_total"], out["best_diam"]
+        ev.a32[...] = ev.adj  # keep the numpy-path mirror coherent
+        return out["done"]
+    return _sa_chunk_py(rep, n, de1, de2, dorient, du, gamma, full_frac,
+                        target_total, iter_base, norm)
+
+
 def sa_search(
     n: int,
     k: int,
@@ -214,49 +351,85 @@ def sa_search(
     t_end: float = 1e-4,
     target_mpl: float | None = None,
     start: Graph | None = None,
+    replicas: int = 1,
+    exchange_every: int = 400,
+    full_rebuild_frac: float = 0.9,
 ) -> SearchResult:
-    """Paper Algorithm 1: SA over non-ring edge swaps, exponential cooling."""
-    rng = np.random.default_rng(seed)
-    g0 = start or random_hamiltonian_regular(n, k, seed=seed)
-    adj = g0.adjacency()
-    ring_mask = ring(n).adjacency()
-    gamma = math.exp(math.log(t_end / t_start) / n_iter)
+    """Paper Algorithm 1, rebuilt: parallel-replica SA with incremental MPL.
 
-    cur_mpl, cur_d = _mpl_fast(adj)
-    best_adj, best_mpl, best_d = adj.copy(), cur_mpl, cur_d
-    t = t_start
-    accepted = 0
-    history = [best_mpl]
+    ``replicas`` independent chains anneal under the shared schedule, each on
+    its own PRNG stream (``[seed, r]``); every ``exchange_every`` iterations
+    the globally best state replaces the worst chain.  Replica 0 is never
+    overwritten, so its trajectory is bit-identical to a ``replicas=1`` run
+    with the same seed — best-of-R can only improve on it.  Swap pricing is
+    ``metrics.IncrementalAPSP`` delta evaluation (C kernel when available).
+    """
+    ring_mask = ring(n).adjacency()
+    gamma = math.exp(math.log(t_end / t_start) / n_iter) if n_iter else 1.0
+    norm = n * (n - 1)
     lb = metrics.mpl_lower_bound(n, k)
     tgt = target_mpl if target_mpl is not None else lb
+    target_total = math.floor((tgt + 1e-9) * norm + 1e-9)
 
-    for it in range(n_iter):
-        prop = _edge_swap(adj, ring_mask, rng)
-        t *= gamma
-        if prop is None:
-            continue
-        new_mpl, new_d = _mpl_fast(prop)
-        dm = new_mpl - cur_mpl
-        if dm < 0 or rng.random() < math.exp(-dm / max(t, 1e-12)):
-            adj, cur_mpl, cur_d = prop, new_mpl, new_d
-            accepted += 1
-            if (cur_mpl, cur_d) < (best_mpl, best_d):
-                best_adj, best_mpl, best_d = adj.copy(), cur_mpl, cur_d
-                history.append(best_mpl)
-                if best_mpl <= tgt + 1e-9:
-                    break
+    reps: list[_Replica] = []
+    for r in range(replicas):
+        g0 = start or random_hamiltonian_regular(n, k, seed=[seed, r])
+        reps.append(_Replica(g0.adjacency(), ring_mask, t_start,
+                             np.random.default_rng([seed, r]), n_iter))
 
-    iu, ju = np.where(np.triu(best_adj))
+    done = 0
+    hit = min(rep.best_total for rep in reps) <= target_total
+    while done < n_iter and not hit:
+        chunk = min(exchange_every, n_iter - done)
+        for rep in reps:
+            _run_chunk(rep, n, chunk, done, gamma, full_rebuild_frac,
+                       target_total, norm)
+            if rep.best_total <= target_total:
+                hit = True
+                break
+        done += chunk
+        if hit or done >= n_iter:
+            break
+        if replicas > 1:
+            gb = min(range(replicas),
+                     key=lambda r: (reps[r].best_total, reps[r].best_diam, r))
+            worst = max(range(1, replicas),
+                        key=lambda r: (reps[r].cur_total, reps[r].cur_diam, -r))
+            if (reps[gb].best_total, reps[gb].best_diam) < \
+                    (reps[worst].cur_total, reps[worst].cur_diam):
+                reps[worst].load_best_of(reps[gb], ring_mask)
+
+    gb = min(range(replicas), key=lambda r: (reps[r].best_total, reps[r].best_diam, r))
+    best = reps[gb]
+    iu, ju = np.where(np.triu(best.best_adj))
     g = from_edges(n, zip(iu.tolist(), ju.tolist()), f"({n},{k})-Optimal-SA")
+
+    # merged best-so-far trace across replicas (running global minimum)
+    events = sorted(
+        (int(it), int(tot))
+        for rep in reps
+        for it, tot in zip(rep.hist_iters[: int(rep.hist_io[1])],
+                           rep.hist_totals[: int(rep.hist_io[1])])
+    )
+    history = []
+    running = float("inf")
+    for _, tot in events:
+        if tot < running:
+            running = tot
+            history.append(tot / norm)
+
     return SearchResult(
         graph=g,
-        mpl=best_mpl,
-        diameter=best_d,
+        mpl=best.best_total / norm,
+        diameter=float(best.best_diam),
         mpl_lb=lb,
         d_lb=metrics.diameter_lower_bound(n, k),
         iterations=n_iter,
-        accepted=accepted,
-        history=history,
+        accepted=int(sum(int(rep.stats[0]) for rep in reps)),
+        history=history or [best.best_total / norm],
+        replicas=replicas,
+        evals_delta=int(sum(int(rep.stats[1]) + rep.ev.n_delta for rep in reps)),
+        evals_full=int(sum(int(rep.stats[2]) + rep.ev.n_full for rep in reps)),
     )
 
 
@@ -308,6 +481,38 @@ def sa_objective_search(
 # Tier 3: rotational-symmetry (circulant) search for large graphs
 # --------------------------------------------------------------------------------
 
+def _circulant_profile(n: int, offsets) -> tuple[float, float]:
+    """(MPL, diameter) of C_n(offsets) via implicit np.roll BFS from vertex 0.
+
+    Vertex-transitivity means one BFS gives the global MPL/diameter; working
+    on the offset list directly (no Graph/edge-list materialisation) makes a
+    candidate evaluation O(D * k * n) vector ops — thousands of candidates
+    per second at n = 1024.
+    """
+    shifts = sorted({s % n for s in offsets} - {0})
+    shifts = list({sh for s in shifts for sh in (s, n - s)})
+    reach = np.zeros(n, dtype=bool)
+    reach[0] = True
+    frontier = reach.copy()
+    total = 0
+    count = 1
+    d = 0
+    while count < n:
+        nxt = np.zeros(n, dtype=bool)
+        for s in shifts:
+            nxt |= np.roll(frontier, s)
+        newf = nxt & ~reach
+        c = int(newf.sum())
+        if c == 0:
+            return float("inf"), float("inf")
+        d += 1
+        total += d * c
+        count += c
+        reach |= newf
+        frontier = newf
+    return total / (n - 1), float(d)
+
+
 def circulant_search(
     n: int,
     k: int,
@@ -319,8 +524,9 @@ def circulant_search(
 
     Circulants are Hamiltonian (offset 1 in the set) with full rotational
     symmetry — the subspace the paper searches for 252/256/264-vertex graphs.
-    Per-candidate MPL costs one BFS (vertex-transitive), so this is fast even
-    at n=1024.
+    Candidates are priced by ``_circulant_profile`` (implicit BFS on the
+    offset list, no graph construction), so 512/1024-vertex searches finish
+    in seconds.
     """
     rng = np.random.default_rng(seed)
     half = k // 2
@@ -328,49 +534,40 @@ def circulant_search(
     if has_anti and n % 2:
         raise ValueError("odd k needs even n")
 
-    def make(offsets):
+    def full_offsets(offsets) -> list[int]:
         offs = ([1] if include_ring else []) + sorted(offsets)
         if has_anti:
             offs = offs + [n // 2]
-        return circulant(n, offs, f"({n},{k})-Circ")
+        return offs
 
     def mpl_of(offsets) -> tuple[float, float]:
-        g = make(offsets)
-        if g.degree() != k:
+        offs = full_offsets(offsets)
+        if len(set(offs)) != len(offs):
             return float("inf"), float("inf")
-        # vertex-transitive: BFS from vertex 0 suffices
-        adj = g.adjacency_lists()
-        dist = np.full(n, -1)
-        dist[0] = 0
-        q = [0]
-        while q:
-            nq = []
-            for u in q:
-                for v in adj[u]:
-                    if dist[v] < 0:
-                        dist[v] = dist[u] + 1
-                        nq.append(v)
-            q = nq
-        if (dist < 0).any():
-            return float("inf"), float("inf")
-        return float(dist.sum() / (n - 1)), float(dist.max())
+        return _circulant_profile(n, offs)
 
     n_free = half - (1 if include_ring else 0)
     lo, hi = 2, n // 2 - (1 if has_anti else 0)
     pool = list(range(lo, hi))
-    best_offs = None
+    if n_free > len(pool):
+        raise ValueError(f"degree {k} too large for circulant on {n} vertices")
+    best_offs: list[int] | None = None
     best = (float("inf"), float("inf"))
-    history = []
+    history: list[float] = []
     it = 0
     restarts = max(1, n_iter // 50)
-    for r in range(restarts):
+    for _ in range(restarts):
         offs = sorted(rng.choice(pool, size=n_free, replace=False).tolist()) if n_free else []
         cur = mpl_of(offs)
         improved = True
         while improved and it < n_iter:
             improved = False
             for pos in range(len(offs)):
-                for cand in rng.permutation(pool)[: min(32, len(pool))]:
+                # exhaustive sweep of the position when affordable, else a
+                # random subsample (the paper's large-space regime)
+                cands = pool if len(pool) * len(offs) <= n_iter else \
+                    rng.permutation(pool)[: min(32, len(pool))]
+                for cand in cands:
                     it += 1
                     if cand in offs:
                         continue
@@ -385,8 +582,8 @@ def circulant_search(
         if cur < best:
             best, best_offs = cur, list(offs)
             history.append(best[0])
-    g = make(best_offs or [])
-    g = g.with_name(f"({n},{k})-Suboptimal")
+    offs = full_offsets(best_offs or [])
+    g = circulant(n, offs, f"({n},{k})-Suboptimal")
     return SearchResult(
         graph=g,
         mpl=best[0],
@@ -396,6 +593,7 @@ def circulant_search(
         iterations=it,
         accepted=it,
         history=history,
+        offsets=tuple(offs),
     )
 
 
@@ -454,6 +652,22 @@ def _symmetric_random_start(
     return None
 
 
+def _circulant_orbits(n: int, s: int, offsets) -> set[frozenset[tuple[int, int]]]:
+    """Chord-edge orbits (under rotation by s) of circulant C_n(offsets).
+
+    Excludes the ring offset 1 — a circulant is invariant under every
+    rotation, so its chords decompose into orbits of the coarser rotation-by-s
+    subgroup, giving ``symmetric_sa_search`` a warm start.
+    """
+    orbits: set[frozenset[tuple[int, int]]] = set()
+    for o in sorted({x % n for x in offsets} - {0}):
+        if o in (1, n - 1):
+            continue
+        for u in range(s):
+            orbits.add(_orbit(n, s, u, (u + o) % n))
+    return orbits
+
+
 def symmetric_sa_search(
     n: int,
     k: int,
@@ -463,6 +677,7 @@ def symmetric_sa_search(
     t_start: float = 0.05,
     t_end: float = 1e-4,
     target_mpl: float | None = None,
+    start_orbits: set[frozenset[tuple[int, int]]] | None = None,
 ) -> SearchResult:
     """SA over *orbit-level* edge swaps of graphs with ``fold``-fold
     rotational symmetry (paper: 'random iteration of Hamiltonian graphs with
@@ -470,13 +685,15 @@ def symmetric_sa_search(
 
     The graph stays invariant under rotation by s = n/fold throughout, so the
     search space shrinks by ~fold× and every accepted design is symmetric —
-    the paper's engineering-feasibility requirement.
+    the paper's engineering-feasibility requirement.  ``start_orbits`` (e.g.
+    from ``_circulant_orbits`` of a good circulant) warm-starts the walk.
     """
     if n % fold:
         raise ValueError("fold must divide n")
     s = n // fold
     rng = np.random.default_rng(seed)
-    orbits = _symmetric_random_start(n, k, s, rng)
+    orbits = set(start_orbits) if start_orbits is not None else \
+        _symmetric_random_start(n, k, s, rng)
     if orbits is None:
         raise RuntimeError(f"no symmetric start found for ({n},{k}) fold={fold}")
     ring_edges = {(i, (i + 1) % n) for i in range(n - 1)} | {(0, n - 1)}
@@ -568,8 +785,48 @@ def symmetric_sa_search(
 
 
 # --------------------------------------------------------------------------------
-# Driver
+# Drivers
 # --------------------------------------------------------------------------------
+
+def large_search(
+    n: int,
+    k: int,
+    seed: int = 0,
+    budget: int | None = None,
+    fold: int = 4,
+    polish: bool = True,
+) -> SearchResult:
+    """Large-N tier: fast circulant hillclimb, then orbit-level SA polish
+    warm-started from the best circulant (when ``fold`` divides ``n``).
+
+    Returns whichever of the two stages found the lower (MPL, diameter).
+    A pinned offset set in ``known_optimal.KNOWN_CIRCULANT_OFFSETS`` skips
+    the hillclimb entirely (seed 0 reproduces the pinning run).
+    """
+    from .known_optimal import KNOWN_CIRCULANT_OFFSETS
+
+    pinned = KNOWN_CIRCULANT_OFFSETS.get((n, k)) if seed == 0 else None
+    if pinned is not None:
+        mpl_c, d_c = _circulant_profile(n, pinned)
+        res_c = SearchResult(
+            graph=circulant(n, pinned, f"({n},{k})-Suboptimal"),
+            mpl=mpl_c, diameter=d_c,
+            mpl_lb=metrics.mpl_lower_bound(n, k),
+            d_lb=metrics.diameter_lower_bound(n, k),
+            iterations=0, accepted=0, history=[mpl_c], offsets=tuple(pinned))
+    else:
+        res_c = circulant_search(n, k, seed=seed, n_iter=budget or 400)
+    if not polish or n % fold or res_c.offsets is None:
+        return res_c
+    try:
+        orbits = _circulant_orbits(n, n // fold, res_c.offsets)
+        res_s = symmetric_sa_search(
+            n, k, seed=seed, n_iter=max(200, (budget or 400) * 2),
+            fold=fold, start_orbits=orbits)
+    except (RuntimeError, ValueError):  # pragma: no cover - defensive
+        return res_c
+    return res_s if (res_s.mpl, res_s.diameter) < (res_c.mpl, res_c.diameter) else res_c
+
 
 def find_optimal(
     n: int,
@@ -577,34 +834,32 @@ def find_optimal(
     seed: int = 0,
     budget: int | None = None,
     method: str | None = None,
+    replicas: int | None = None,
 ) -> Graph:
     """Paper-facing driver: pick a search tier by size and return best graph.
 
-    method: 'exhaustive' | 'sa' | 'circulant' | None (auto).
-    Auto policy: tiny k=3 → exhaustive-ish SA hybrid; n <= 64 → SA with
-    multi-restart; larger → circulant (symmetry-restricted) + SA polish.
+    method: 'exhaustive' | 'sa' | 'circulant' | 'symmetric' | 'large' |
+    None (auto).  Auto policy: pinned edge lists from ``known_optimal`` are
+    returned instantly; n <= 64 → parallel-replica SA; larger →
+    ``large_search`` (pinned-or-searched circulant + orbit-SA polish).
     """
     if method is None:
         from .known_optimal import KNOWN_EDGE_LISTS
 
         if (n, k) in KNOWN_EDGE_LISTS:
             return from_edges(n, KNOWN_EDGE_LISTS[(n, k)], f"({n},{k})-Optimal")
-        method = "sa" if n <= 64 else "circulant"
+        method = "sa" if n <= 64 else "large"
     if method == "exhaustive":
         return exhaustive_search(n, k, limit=budget or 200_000).graph
     if method == "sa":
         tgt = KNOWN_OPTIMAL_MPL.get((n, k))
-        best: SearchResult | None = None
-        restarts = 3 if n <= 40 else 2
-        for r in range(restarts):
-            res = sa_search(n, k, seed=seed + r, n_iter=budget or 4000, target_mpl=tgt)
-            if best is None or (res.mpl, res.diameter) < (best.mpl, best.diameter):
-                best = res
-            if tgt is not None and best.mpl <= tgt + 1e-9:
-                break
-        assert best is not None
-        return best.graph.with_name(f"({n},{k})-Optimal")
+        res = sa_search(n, k, seed=seed, n_iter=budget or 4000, target_mpl=tgt,
+                        replicas=replicas or (3 if n <= 40 else 2))
+        return res.graph.with_name(f"({n},{k})-Optimal")
     if method == "circulant":
-        res = circulant_search(n, k, seed=seed, n_iter=budget or 300)
-        return res.graph
+        return circulant_search(n, k, seed=seed, n_iter=budget or 300).graph
+    if method == "symmetric":
+        return symmetric_sa_search(n, k, seed=seed, n_iter=budget or 3000).graph
+    if method == "large":
+        return large_search(n, k, seed=seed, budget=budget).graph
     raise ValueError(f"unknown method {method!r}")

@@ -1,0 +1,175 @@
+"""Deterministic stand-in for ``hypothesis`` when the real package is absent.
+
+The CI image installs real hypothesis (declared in pyproject.toml); this
+fallback keeps the suite runnable in minimal environments where it is not
+available.  It implements exactly the API surface the tests use — ``given``,
+``settings``, ``assume``, ``HealthCheck`` and the ``integers`` / ``floats`` /
+``sampled_from`` / ``booleans`` / ``lists`` / ``tuples`` / ``just`` /
+``composite`` strategies — with example generation driven by a PRNG seeded
+from the test's qualified name, so runs are bit-reproducible (no shrinking,
+no example database).
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["install"]
+
+
+class _Strategy:
+    def __init__(self, fn):
+        self._fn = fn
+
+    def example(self, rng):
+        return self._fn(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._fn(rng)))
+
+    def filter(self, pred):
+        def gen(rng):
+            for _ in range(1000):
+                v = self._fn(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied("filter predicate never satisfied")
+        return _Strategy(gen)
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False) / unsatisfiable filters: skip the example."""
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: float(min_value + (max_value - min_value) * rng.random()))
+
+
+def _sampled_from(seq):
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def _lists(elem, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+    return _Strategy(
+        lambda rng: [elem.example(rng) for _ in range(int(rng.integers(min_size, hi + 1)))]
+    )
+
+
+def _tuples(*strats):
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def _just(value):
+    return _Strategy(lambda rng: value)
+
+
+def _composite(fn):
+    def builder(*args, **kwargs):
+        def gen(rng):
+            return fn(lambda strategy: strategy.example(rng), *args, **kwargs)
+        return _Strategy(gen)
+    return builder
+
+
+def _assume(condition):
+    if not condition:
+        raise _Unsatisfied("assume(False)")
+    return True
+
+
+class _Settings:
+    def __init__(self, max_examples=50, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+class _HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+def _given(*strats, **kwstrats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            st = getattr(wrapper, "_fallback_settings", None) or getattr(
+                fn, "_fallback_settings", None
+            )
+            max_examples = st.max_examples if st else 50
+            base = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            done = attempt = 0
+            while done < max_examples:
+                if attempt >= max_examples * 50:
+                    raise RuntimeError(
+                        f"hypothesis fallback: could not satisfy assumptions for {fn.__qualname__}"
+                    )
+                rng = np.random.default_rng([base, attempt])
+                attempt += 1
+                try:
+                    vals = [s.example(rng) for s in strats]
+                    kvals = {k: s.example(rng) for k, s in kwstrats.items()}
+                    fn(*args, *vals, **kvals, **kwargs)
+                except _Unsatisfied:
+                    continue
+                done += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._fallback_settings = getattr(fn, "_fallback_settings", None)
+        # Hide strategy-bound parameters from pytest so it does not treat them
+        # as fixtures (hypothesis binds strategies to the trailing parameters).
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[: len(params) - len(strats)]
+        keep = [p for p in keep if p.name not in kwstrats]
+        wrapper.__signature__ = inspect.Signature(keep)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` + ``hypothesis.strategies`` in sys.modules."""
+    if "hypothesis" in sys.modules:  # real package (or already installed stub)
+        return
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = _integers
+    strategies.floats = _floats
+    strategies.sampled_from = _sampled_from
+    strategies.booleans = _booleans
+    strategies.lists = _lists
+    strategies.tuples = _tuples
+    strategies.just = _just
+    strategies.composite = _composite
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.__is_fallback__ = True
+    hyp.given = _given
+    hyp.settings = _Settings
+    hyp.assume = _assume
+    hyp.HealthCheck = _HealthCheck
+    hyp.seed = lambda _s: (lambda fn: fn)
+    hyp.note = lambda *_a, **_k: None
+    hyp.strategies = strategies
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

@@ -7,9 +7,9 @@ import pytest
 def test_ring_and_recdbl_allreduce(devices8):
     out = devices8("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.comm import jaxcoll as jc
-mesh = jax.make_mesh((8,), ("x",), axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((8,), ("x",))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(8, 16, 5)).astype(np.float32))
 want = np.asarray(x.sum(0))
@@ -24,9 +24,9 @@ print("PASS")
 def test_int8_compressed_allreduce(devices8):
     out = devices8("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.comm import jaxcoll as jc
-mesh = jax.make_mesh((8,), ("x",), axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((8,), ("x",))
 rng = np.random.default_rng(1)
 x = jnp.asarray(rng.normal(size=(8, 64, 3)).astype(np.float32))
 want = np.asarray(x.sum(0))
@@ -41,11 +41,11 @@ print("PASS", rel)
 def test_flood_bcast_and_ham_order(devices8):
     out = devices8("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.comm import jaxcoll as jc
 from repro.core import graphs
 from repro.core.hamiltonian import hamiltonian_cycle
-mesh = jax.make_mesh((8,), ("x",), axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((8,), ("x",))
 rng = np.random.default_rng(2)
 x = jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32))
 g = graphs.wagner(8)

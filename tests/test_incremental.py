@@ -1,0 +1,156 @@
+"""Property tests for the incremental APSP evaluator (the search hot path).
+
+The contract under test: after any valid 2-out/2-in edge swap,
+``IncrementalAPSP.evaluate_swap`` produces *exactly* the distance matrix,
+total, MPL and diameter that a from-scratch ``metrics.apsp`` recompute
+yields — on the delta path, the forced-full path, the C kernel and the pure
+numpy fallback alike, including swaps that disconnect the graph.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics
+from repro.core.graphs import from_edges, random_hamiltonian_regular, ring
+
+
+def _swap_space(n):
+    return ring(n).adjacency()
+
+
+def _random_swap(ev, ring_mask, rng):
+    """A valid 2-edge swap on the evaluator's current graph, or None."""
+    iu, ju = np.where(np.triu(ev.adj & ~ring_mask))
+    if len(iu) < 2:
+        return None
+    e1, e2 = rng.choice(len(iu), size=2, replace=False)
+    a, b = int(iu[e1]), int(ju[e1])
+    c, d = int(iu[e2]), int(ju[e2])
+    if len({a, b, c, d}) != 4:
+        return None
+    p1, p2 = ((a, c), (b, d)) if rng.integers(2) else ((a, d), (b, c))
+    if ev.adj[p1] or ev.adj[p2]:
+        return None
+    return [(a, b), (c, d)], [p1, p2]
+
+
+def _reference(adj, removed, added):
+    """From-scratch hop distances after applying the swap to a copy."""
+    adj2 = adj.copy()
+    for u, v in removed:
+        adj2[u, v] = adj2[v, u] = False
+    for u, v in added:
+        adj2[u, v] = adj2[v, u] = True
+    return metrics.apsp_hops(adj2)
+
+
+@st.composite
+def swap_instance(draw):
+    n = draw(st.integers(12, 28))
+    k = draw(st.sampled_from([3, 4, 5]))
+    if n * (k - 2) % 2 or n <= 2 * k:
+        n, k = 16, 4
+    seed = draw(st.integers(0, 5_000))
+    return n, k, seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(swap_instance(), st.integers(0, 10_000))
+def test_delta_matches_full_recompute(inst, swap_seed):
+    """Delta-updated dist/MPL after random swaps == metrics.apsp recompute."""
+    n, k, seed = inst
+    try:
+        g = random_hamiltonian_regular(n, k, seed=seed)
+    except RuntimeError:
+        return
+    rng = np.random.default_rng(swap_seed)
+    ring_mask = _swap_space(n)
+    ev = metrics.IncrementalAPSP(g.adjacency().copy(), full_rebuild_frac=1.1)
+    ev_full = metrics.IncrementalAPSP(g.adjacency().copy(), force_full=True)
+    for _ in range(6):
+        swap = _random_swap(ev, ring_mask, rng)
+        if swap is None:
+            continue
+        removed, added = swap
+        ref = _reference(ev.adj, removed, added)
+        tok = ev.evaluate_swap(removed, added, want_diameter=False)
+        tok_full = ev_full.evaluate_swap(removed, added)
+        assert np.array_equal(tok.dist, ref)
+        assert np.array_equal(tok_full.dist, ref)
+        assert tok.total == tok_full.total == int(ref.sum(dtype=np.int64))
+        assert tok.mpl == tok_full.mpl
+        if rng.random() < 0.7:
+            ev.commit(tok)
+            ev_full.commit(tok_full)
+            ev.verify()
+            ev_full.verify()
+            assert ev.diam == ev_full.diam
+    assert ev.n_full == 0  # frac > 1: the delta path must have priced everything
+    assert ev_full.n_delta == 0 and ev_full.n_full > 0  # forced fallback path
+
+
+@settings(max_examples=20, deadline=None)
+@given(swap_instance(), st.integers(0, 10_000))
+def test_c_and_numpy_paths_identical(inst, swap_seed):
+    """The C kernel and the numpy fallback are bit-identical (when C exists)."""
+    n, k, seed = inst
+    try:
+        g = random_hamiltonian_regular(n, k, seed=seed)
+    except RuntimeError:
+        return
+    ev_c = metrics.IncrementalAPSP(g.adjacency().copy())
+    if ev_c.fast is None:
+        pytest.skip("no C compiler in this environment")
+    ev_np = metrics.IncrementalAPSP(g.adjacency().copy(), use_c=False)
+    rng = np.random.default_rng(swap_seed)
+    ring_mask = _swap_space(n)
+    for _ in range(6):
+        swap = _random_swap(ev_c, ring_mask, rng)
+        if swap is None:
+            continue
+        removed, added = swap
+        tc = ev_c.evaluate_swap(removed, added, want_diameter=False)
+        tn = ev_np.evaluate_swap(removed, added)
+        assert np.array_equal(tc.dist, tn.dist)
+        assert tc.total == tn.total and tc.mpl == tn.mpl
+        if rng.random() < 0.5:
+            ev_c.commit(tc)
+            ev_np.commit(tn)
+            assert ev_c.diam == ev_np.diam and ev_c.total == ev_np.total
+
+
+def test_disconnecting_swap_reports_inf_and_recovers():
+    """The disconnect path: MPL/diameter go to inf, state stays exact, and a
+    reconnecting swap restores finite values (fallback path exercised)."""
+    edges = [(0, 1), (1, 2), (2, 3), (3, 0), (4, 5), (5, 6), (6, 7), (7, 4),
+             (0, 4), (2, 6)]
+    g = from_edges(8, edges)
+    ev = metrics.IncrementalAPSP(g.adjacency().copy())
+    tok = ev.evaluate_swap([(0, 4), (2, 6)], [(0, 2), (4, 6)])
+    assert tok.mpl == float("inf")
+    assert np.array_equal(tok.dist, _reference(ev.adj, [(0, 4), (2, 6)], [(0, 2), (4, 6)]))
+    ev.commit(tok)
+    ev.verify()
+    assert not ev.connected and ev.mpl() == float("inf")
+    # disconnected base forces the full-recompute fallback on the next swap
+    tok2 = ev.evaluate_swap([(0, 2), (4, 6)], [(0, 4), (2, 6)])
+    assert ev.n_full >= 1
+    assert tok2.mpl < float("inf")
+    ev.commit(tok2)
+    ev.verify()
+    assert ev.connected
+
+
+def test_swap_token_diameter_deferred_then_committed():
+    g = random_hamiltonian_regular(20, 4, seed=1)
+    ev = metrics.IncrementalAPSP(g.adjacency().copy())
+    rng = np.random.default_rng(0)
+    ring_mask = _swap_space(20)
+    swap = None
+    while swap is None:
+        swap = _random_swap(ev, ring_mask, rng)
+    tok = ev.evaluate_swap(*swap, want_diameter=False)
+    ev.commit(tok)
+    ref = metrics.apsp_hops(ev.adj)
+    assert ev.diam == int(ref.max())
+    assert ev.total == int(ref.sum(dtype=np.int64))

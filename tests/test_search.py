@@ -37,6 +37,36 @@ def test_search_deterministic_per_seed():
     assert c.graph.degree() == 4
 
 
+def test_replica_search_bit_identical_per_seed():
+    """Same seed => bit-identical SearchResult across runs, replicas > 1."""
+    a = search.sa_search(20, 4, seed=11, n_iter=600, replicas=3)
+    b = search.sa_search(20, 4, seed=11, n_iter=600, replicas=3)
+    assert a.graph.edges == b.graph.edges
+    assert a.mpl == b.mpl and a.diameter == b.diameter
+    assert a.accepted == b.accepted
+    assert a.history == b.history
+    assert a.evals_delta == b.evals_delta and a.evals_full == b.evals_full
+
+
+@pytest.mark.parametrize("n,k,seed", [(16, 3, 2), (20, 4, 5), (24, 4, 9)])
+def test_best_of_replicas_never_worse_than_single(n, k, seed):
+    """Replica 0 is a protected reference chain: the best-of-R result can
+    never be worse than the single-replica run at the same seed."""
+    single = search.sa_search(n, k, seed=seed, n_iter=800, replicas=1)
+    multi = search.sa_search(n, k, seed=seed, n_iter=800, replicas=4)
+    assert (multi.mpl, multi.diameter) <= (single.mpl, single.diameter)
+    assert multi.replicas == 4
+    assert multi.graph.is_regular() and multi.graph.degree() == k
+
+
+def test_engine_uses_delta_evaluation():
+    """The incremental path must carry the load — full recomputes are the
+    guarded fallback, not the norm."""
+    res = search.sa_search(32, 4, seed=1, n_iter=600)
+    assert res.evals_delta + res.evals_full > 0
+    assert res.evals_delta >= 9 * res.evals_full
+
+
 def test_exhaustive_tiny():
     res = search.exhaustive_search(10, 3)
     assert res.graph.degree() == 3
@@ -52,6 +82,37 @@ def test_circulant_search_large():
     d, mpl = _props(res.graph)
     # must beat the (64,4) torus 8x8 (MPL 4.06) from the symmetric subspace
     assert mpl < 4.06
+    assert res.offsets is not None and 1 in res.offsets  # Hamiltonian ring kept
+
+
+def test_circulant_search_512_fast():
+    """Acceptance gate: N=512 circulant search in seconds, exact profile."""
+    import time
+
+    t0 = time.perf_counter()
+    res = search.circulant_search(512, 6, seed=0, n_iter=300)
+    assert time.perf_counter() - t0 < 60
+    d, mpl = _props(res.graph)
+    assert mpl == pytest.approx(res.mpl)  # implicit BFS == dense recompute
+    assert d == res.diameter
+    assert res.graph.degree() == 6
+
+
+def test_known_circulant_offsets_are_valid():
+    from repro.core.known_optimal import KNOWN_CIRCULANT_OFFSETS
+    from repro.core.graphs import circulant
+
+    for (n, k), offs in KNOWN_CIRCULANT_OFFSETS.items():
+        g = circulant(n, offs)
+        assert g.degree() == k, (n, k)
+        assert 1 in offs  # Hamiltonian by construction
+
+
+def test_large_search_tiering():
+    res = search.large_search(128, 4, seed=0, budget=200)
+    assert res.graph.n == 128 and res.graph.degree() == 4
+    # must clearly beat the same-degree 8x16 torus (MPL ~6.05)
+    assert res.mpl < 5.5
 
 
 @pytest.mark.slow
