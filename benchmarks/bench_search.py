@@ -10,7 +10,16 @@ tier.  Emits the usual CSV rows AND a machine-readable
         {"name": "sa_n64_k4", "engine_s": ..., "seed_s": ..., "speedup": ...,
          "engine_mpl": ..., "seed_mpl": ..., "mpl_lb": ..., "gap_pct": ...},
         {"name": "circulant_n512_k6", "wall_s": ..., "mpl": ..., "gap_pct": ...},
+        {"name": "polish_n2048_k6", "fold": ..., "engine_s": ..., "seed_s": ...,
+         "speedup": ..., "engine_mpl": ..., "mpl": ..., "mpl_lb": ...,
+         "gap_pct": ...},
         ...]}
+
+``polish_*`` rows time the symmetry-aware incremental orbit SA
+(``metrics.SymmetricAPSP`` delta pricing) against the seed dense-BFS orbit SA
+(``_mpl_fast`` from n/fold sources per proposal) at equal iteration count and
+seed; the two trajectories are bit-identical, so ``engine_mpl == mpl`` and
+``speedup`` isolates the evaluator.
 """
 import json
 import math
@@ -23,6 +32,7 @@ import numpy as np
 from . import common
 from repro.core import metrics, search
 from repro.core.graphs import random_hamiltonian_regular, ring
+from repro.core.known_optimal import KNOWN_CIRCULANT_OFFSETS
 
 
 # ------------------------------------------------------------------------------
@@ -151,6 +161,40 @@ def run(smoke: bool = False) -> common.Rows:
             "wall_s": round(dt, 4), "mpl": res.mpl, "mpl_lb": lb,
             "gap_pct": round((res.mpl / lb - 1) * 100, 2),
             "diameter": res.diameter, "offsets": list(res.offsets or ()),
+        })
+
+    # --- large-N polish tier: incremental orbit SA vs seed dense-BFS orbit SA
+    # (equal iteration count, same seed and warm start: the trajectories are
+    # bit-identical, so the MPL columns must agree and speedup isolates the
+    # SymmetricAPSP evaluator)
+    polish_cases = [(2048, 6, 8, 12)] if smoke else [(2048, 6, 8, 40), (4096, 8, 8, 24)]
+    for (n, k, fold, iters) in polish_cases:
+        lb = metrics.mpl_lower_bound(n, k)
+        offs = KNOWN_CIRCULANT_OFFSETS[(n, k)]
+        orbits = search._circulant_orbits(n, n // fold, offs)
+        t0 = time.perf_counter()
+        res = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
+                                         start_orbits=orbits, incremental=True)
+        engine_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res_seed = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
+                                              start_orbits=orbits, incremental=False)
+        seed_s = time.perf_counter() - t0
+        speedup = seed_s / engine_s if engine_s > 0 else float("inf")
+        rows.add(f"polish_n{n}_k{k}", engine_s,
+                 f"{iters} orbit iters fold={fold} engine={engine_s:.3f}s "
+                 f"seed={seed_s:.3f}s speedup={speedup:.1f}x mpl={res.mpl:.4f} "
+                 f"(seed {res_seed.mpl:.4f}) lb={lb:.4f} "
+                 f"delta={res.evals_delta} full={res.evals_full}")
+        results.append({
+            "name": f"polish_n{n}_k{k}", "n": n, "k": k, "fold": fold,
+            "iters": iters,
+            "engine_s": round(engine_s, 4), "seed_s": round(seed_s, 4),
+            "speedup": round(speedup, 2),
+            "engine_mpl": res.mpl, "mpl": res_seed.mpl, "seed_mpl": res_seed.mpl,
+            "mpl_lb": lb,
+            "gap_pct": round((res.mpl / lb - 1) * 100, 2),
+            "evals_delta": res.evals_delta, "evals_full": res.evals_full,
         })
 
     out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")

@@ -78,17 +78,20 @@ static void bfs_one(int n, int kmax, const int32_t* nbr,
     }
 }
 
-/* All-pairs hop distances into out[n*n]. queue: scratch of n ints. */
-void apsp_rows(int n, int kmax, const int32_t* nbr, int32_t* out, int32_t* queue)
+/* Hop distances from sources 0..nsrc-1 into out[nsrc*n] (nsrc == n gives
+   all-pairs; nsrc < n serves the row-restricted symmetric evaluator).
+   queue: scratch of n ints. */
+void apsp_rows(int n, int kmax, int nsrc, const int32_t* nbr, int32_t* out, int32_t* queue)
 {
-    for (int s = 0; s < n; s++)
+    for (int s = 0; s < nsrc; s++)
         bfs_one(n, kmax, nbr, 0, 0, 0, 0, 0, 0, s, out + (size_t)s * n, queue);
 }
 
-/* npar[s*n+x] = #neighbours w of x with dist[s*n+w] + 1 == dist[s*n+x]. */
-void parent_counts(int n, int kmax, const int32_t* nbr, const int32_t* dist, int16_t* npar)
+/* npar[s*n+x] = #neighbours w of x with dist[s*n+w] + 1 == dist[s*n+x],
+   for source rows s = 0..nsrc-1. */
+void parent_counts(int n, int kmax, int nsrc, const int32_t* nbr, const int32_t* dist, int16_t* npar)
 {
-    for (int s = 0; s < n; s++) {
+    for (int s = 0; s < nsrc; s++) {
         const int32_t* ds = dist + (size_t)s * n;
         int16_t* ps = npar + (size_t)s * n;
         for (int x = 0; x < n; x++) {
@@ -335,6 +338,155 @@ int32_t eval_swap(int n, int kmax, const int32_t* nbr,
     }
     return naff;
 }
+
+/* Orbit-delta entry point: batched multi-edge swap evaluation on the
+   row-restricted distance matrix of a rotationally symmetric graph.
+
+   dist/newdist are s*n (source rows 0..s-1); the graph must be invariant
+   under rotation by s before AND after the swap (the removed/added edge
+   sets are unions of rotation orbits — the caller validates).  Removed
+   edges are (ra[t], rb[t]) for t < nrem; ria/rib give, per edge, the slot
+   of each endpoint in the unique-endpoint table rpts[nrp].  Added edges
+   likewise (xa, xb, nadd) with unique endpoints apts[nap].
+
+   Phase 1 is the exact batched lost-parent test + cascade repair of the
+   affected rows on the graph minus the removed edges; phase 2 patches the
+   insertions by a min-plus closure through the added-edge endpoints, whose
+   full post-removal rows are rotations of representative rows (the
+   post-removal graph is still symmetric).
+
+   total_out gets the representative-row total (full total = fold * it);
+   max_out the row max (== global diameter by symmetry).  Returns the
+   number of affected rows, or -1 when the full-rebuild path ran.
+   scratch: the evaluator's 8n zero-initialised int32 block (queue, pc,
+   state, oldvals, stamp, gen — same layout as eval_swap).
+   work: >= nap*(n + nap + 2) + nrp int32 (rolled endpoint rows, the
+   endpoint closure matrix, two m-vectors, lost counters). */
+int32_t eval_orbit_swap(int n, int kmax, int s, const int32_t* nbr,
+                        const int32_t* dist, const int16_t* npar,
+                        const int32_t* ra, const int32_t* rb, int nrem,
+                        const int32_t* ria, const int32_t* rib,
+                        const int32_t* rpts, int nrp,
+                        const int32_t* xa, const int32_t* xb, int nadd,
+                        const int32_t* apts, int nap,
+                        int force_full, double full_frac,
+                        int32_t* newdist, int64_t* total_out, int32_t* max_out,
+                        int32_t* scratch, int32_t* work)
+{
+    int32_t* queue = scratch;
+    int32_t* aff = scratch + n;
+    int32_t* oldvals = scratch + 3 * n;
+    int16_t* pc = (int16_t*)(scratch + 4 * n);
+    unsigned char* state = (unsigned char*)(scratch + 5 * n);
+    int32_t* stamp = scratch + 6 * n;
+    int32_t* genp = scratch + 7 * n;
+    int32_t* crows = work;                              /* nap * n  */
+    int32_t* w = work + (size_t)nap * n;                /* nap * nap */
+    int32_t* arow = w + (size_t)nap * nap;              /* nap */
+    int32_t* tmp = arow + nap;                          /* nap */
+    int32_t* lost = tmp + nap;                          /* nrp */
+
+    const size_t sn = (size_t)s * n;
+    int naff = 0;
+    int full = force_full;
+    if (!full) {
+        for (int r = 0; r < s; r++) {
+            const int32_t* ds = dist + (size_t)r * n;
+            for (int i = 0; i < nrp; i++) lost[i] = 0;
+            for (int t = 0; t < nrem; t++) {
+                if (ds[ra[t]] + 1 == ds[rb[t]]) lost[rib[t]]++;
+                if (ds[rb[t]] + 1 == ds[ra[t]]) lost[ria[t]]++;
+            }
+            const int16_t* ps = npar + (size_t)r * n;
+            for (int i = 0; i < nrp; i++)
+                if (lost[i] > 0 && lost[i] == ps[rpts[i]]) { aff[naff++] = r; break; }
+        }
+        if (naff > full_frac * s) full = 1;
+    }
+
+    if (full) {
+        for (int r = 0; r < s; r++)
+            bfs_one(n, kmax, nbr, ra, rb, nrem, xa, xb, nadd,
+                    r, newdist + (size_t)r * n, queue);
+        naff = -1;
+    } else {
+        memcpy(newdist, dist, sn * sizeof(int32_t));
+        for (int i = 0; i < naff; i++) {
+            int r = aff[i];
+            int32_t* row = newdist + (size_t)r * n;
+            if (++*genp <= 0) { memset(stamp, 0, (size_t)n * sizeof(int32_t)); *genp = 1; }
+            cascade_repair(n, kmax, nbr, npar ? npar + (size_t)r * n : 0, row,
+                           ra, rb, nrem, queue, pc, state, oldvals, stamp, *genp);
+        }
+        if (nadd) {
+            /* rolled post-removal endpoint rows: crows[i][y] = d_rm(p_i, y)
+               = d_rm(p_i mod s, (y - t) mod n) with t = p_i - p_i mod s */
+            for (int i = 0; i < nap; i++) {
+                int p = apts[i];
+                int t = p - p % s;
+                const int32_t* src = newdist + (size_t)(p % s) * n;
+                int32_t* dst = crows + (size_t)i * n;
+                for (int j = 0; j < n; j++) {
+                    int y = j + t;
+                    if (y >= n) y -= n;   /* t < n: one wrap suffices */
+                    dst[y] = src[j];
+                }
+            }
+            /* endpoint-to-endpoint closure, added edges as weight-1 links */
+            for (int i = 0; i < nap; i++)
+                for (int j = 0; j < nap; j++)
+                    w[i * nap + j] = crows[(size_t)i * n + apts[j]];
+            for (int t = 0; t < nadd; t++) {
+                int iu = -1, iv = -1;
+                for (int i = 0; i < nap; i++) {
+                    if (apts[i] == xa[t]) iu = i;
+                    if (apts[i] == xb[t]) iv = i;
+                }
+                if (w[iu * nap + iv] > 1) { w[iu * nap + iv] = 1; w[iv * nap + iu] = 1; }
+            }
+            for (int k = 0; k < nap; k++)
+                for (int i = 0; i < nap; i++) {
+                    int32_t wik = w[i * nap + k];
+                    for (int j = 0; j < nap; j++) {
+                        int32_t c = wik + w[k * nap + j];
+                        if (c < w[i * nap + j]) w[i * nap + j] = c;
+                    }
+                }
+            /* d'(r, y) = min(d_rm(r, y), min_j tmp[j] + crows[j][y]) with
+               tmp[j] = min_i d_rm(r, p_i) + w(i, j) */
+            for (int r = 0; r < s; r++) {
+                int32_t* row = newdist + (size_t)r * n;
+                for (int i = 0; i < nap; i++) arow[i] = row[apts[i]];
+                for (int j = 0; j < nap; j++) {
+                    int32_t best = arow[0] + w[j];
+                    for (int i = 1; i < nap; i++) {
+                        int32_t c = arow[i] + w[i * nap + j];
+                        if (c < best) best = c;
+                    }
+                    tmp[j] = best;
+                }
+                for (int j = 0; j < nap; j++) {
+                    int32_t tj = tmp[j];
+                    if (tj >= n) continue;   /* sentinel-contaminated: no-op */
+                    const int32_t* cj = crows + (size_t)j * n;
+                    for (int y = 0; y < n; y++) {
+                        int32_t c = tj + cj[y];
+                        if (c < row[y]) row[y] = c;
+                    }
+                }
+            }
+        }
+    }
+    int64_t tot = 0;
+    int32_t mx = 0;
+    for (size_t i = 0; i < sn; i++) {
+        tot += newdist[i];
+        if (newdist[i] > mx) mx = newdist[i];
+    }
+    *total_out = tot;
+    *max_out = mx;
+    return naff;
+}
 """
 
 _C_SOURCE += r"""
@@ -421,7 +573,7 @@ int32_t sa_chunk(int n, int kmax,
         rebuild_nbr_row(n, kmax, adj, nbr, b);
         rebuild_nbr_row(n, kmax, adj, nbr, c);
         rebuild_nbr_row(n, kmax, adj, nbr, d);
-        if (npar) parent_counts(n, kmax, nbr, cur_dist, npar);
+        if (npar) parent_counts(n, kmax, n, nbr, cur_dist, npar);
         chords[2 * e1] = p1a; chords[2 * e1 + 1] = p1b;
         chords[2 * e2] = p2a; chords[2 * e2 + 1] = p2b;
         cur_total = total;
@@ -476,15 +628,23 @@ def _compile() -> ctypes.CDLL | None:
     i32p = ctypes.POINTER(ctypes.c_int32)
     i16p = ctypes.POINTER(ctypes.c_int16)
     i64p = ctypes.POINTER(ctypes.c_int64)
-    lib.apsp_rows.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i32p]
+    lib.apsp_rows.argtypes = [ctypes.c_int, ctypes.c_int, ctypes.c_int, i32p, i32p, i32p]
     lib.apsp_rows.restype = None
-    lib.parent_counts.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i16p]
+    lib.parent_counts.argtypes = [ctypes.c_int, ctypes.c_int, ctypes.c_int,
+                                  i32p, i32p, i16p]
     lib.parent_counts.restype = None
     lib.eval_swap.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i16p,
                               i32p, i32p, ctypes.c_int, ctypes.c_double,
                               ctypes.c_int, ctypes.c_int64,
                               i32p, i64p, i32p, i32p]
     lib.eval_swap.restype = ctypes.c_int32
+    lib.eval_orbit_swap.argtypes = [
+        ctypes.c_int, ctypes.c_int, ctypes.c_int, i32p, i32p, i16p,
+        i32p, i32p, ctypes.c_int, i32p, i32p, i32p, ctypes.c_int,
+        i32p, i32p, ctypes.c_int, i32p, ctypes.c_int,
+        ctypes.c_int, ctypes.c_double,
+        i32p, i64p, i32p, i32p, i32p]
+    lib.eval_orbit_swap.restype = ctypes.c_int32
     u8p = ctypes.POINTER(ctypes.c_uint8)
     f64p = ctypes.POINTER(ctypes.c_double)
     lib.sa_chunk.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i16p,
@@ -504,7 +664,10 @@ def get_lib() -> ctypes.CDLL | None:
     if _lib_tried:
         return _lib
     _lib_tried = True
-    if os.environ.get("REPRO_FASTPATH", "1") == "0":
+    # REPRO_FASTPATH=0 (legacy) and REPRO_NO_C_KERNEL=1 (CI matrix job) both
+    # disable the kernel so the numpy fallback branch stays exercised
+    if os.environ.get("REPRO_FASTPATH", "1") == "0" or \
+            os.environ.get("REPRO_NO_C_KERNEL", "0") == "1":
         return None
     try:
         _lib = _compile()
@@ -524,14 +687,47 @@ class FastEval:
         self.lib = lib
 
     def apsp_rows(self, nbr: np.ndarray, out: np.ndarray, scratch: np.ndarray) -> None:
+        """BFS rows for sources 0..out.shape[0]-1 (all-pairs when == n)."""
         n, kmax = nbr.shape
-        self.lib.apsp_rows(n, kmax, _ptr(nbr, ctypes.c_int32),
+        self.lib.apsp_rows(n, kmax, out.shape[0], _ptr(nbr, ctypes.c_int32),
                            _ptr(out, ctypes.c_int32), _ptr(scratch, ctypes.c_int32))
 
     def parent_counts(self, nbr: np.ndarray, dist: np.ndarray, npar: np.ndarray) -> None:
         n, kmax = nbr.shape
-        self.lib.parent_counts(n, kmax, _ptr(nbr, ctypes.c_int32),
+        self.lib.parent_counts(n, kmax, dist.shape[0], _ptr(nbr, ctypes.c_int32),
                                _ptr(dist, ctypes.c_int32), _ptr(npar, ctypes.c_int16))
+
+    def eval_orbit_swap(self, nbr, dist, npar, removed, added, force_full,
+                        full_frac, newdist, scratch, work) -> tuple[int, int, int]:
+        """Batched orbit swap on the (s, n) row-restricted dist; returns
+        (naff, rep_total, rep_max) with naff == -1 for the full path."""
+        n, kmax = nbr.shape
+        s = dist.shape[0]
+        ra = np.ascontiguousarray([e[0] for e in removed], dtype=np.int32)
+        rb = np.ascontiguousarray([e[1] for e in removed], dtype=np.int32)
+        rpts = np.unique(np.concatenate([ra, rb])) if removed else np.empty(0, np.int32)
+        rpts = np.ascontiguousarray(rpts, dtype=np.int32)
+        slot = {int(p): i for i, p in enumerate(rpts)}
+        ria = np.ascontiguousarray([slot[int(v)] for v in ra], dtype=np.int32)
+        rib = np.ascontiguousarray([slot[int(v)] for v in rb], dtype=np.int32)
+        xa = np.ascontiguousarray([e[0] for e in added], dtype=np.int32)
+        xb = np.ascontiguousarray([e[1] for e in added], dtype=np.int32)
+        apts = np.unique(np.concatenate([xa, xb])) if added else np.empty(0, np.int32)
+        apts = np.ascontiguousarray(apts, dtype=np.int32)
+        total = ctypes.c_int64()
+        mx = ctypes.c_int32()
+        naff = self.lib.eval_orbit_swap(
+            n, kmax, s, _ptr(nbr, ctypes.c_int32), _ptr(dist, ctypes.c_int32),
+            _ptr(npar, ctypes.c_int16),
+            _ptr(ra, ctypes.c_int32), _ptr(rb, ctypes.c_int32), len(removed),
+            _ptr(ria, ctypes.c_int32), _ptr(rib, ctypes.c_int32),
+            _ptr(rpts, ctypes.c_int32), len(rpts),
+            _ptr(xa, ctypes.c_int32), _ptr(xb, ctypes.c_int32), len(added),
+            _ptr(apts, ctypes.c_int32), len(apts),
+            int(force_full), float(full_frac),
+            _ptr(newdist, ctypes.c_int32), ctypes.byref(total), ctypes.byref(mx),
+            _ptr(scratch, ctypes.c_int32), _ptr(work, ctypes.c_int32))
+        return int(naff), int(total.value), int(mx.value)
 
     def eval_swap(self, nbr, dist, npar, rem, add, force_full, full_frac,
                   want_max, base_total, newdist, scratch) -> tuple[int, int, int]:

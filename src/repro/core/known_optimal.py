@@ -56,4 +56,11 @@ KNOWN_CIRCULANT_OFFSETS: dict[tuple[int, int], tuple[int, ...]] = {
     (1024, 4): (1, 90),            # MPL 15.0860, D 23
     (1024, 6): (1, 276, 402),      # MPL 6.8416, D 10
     (1024, 8): (1, 378, 403, 473),  # MPL 4.9081, D 7
+    # N=2048/4096 polish tier (symmetry-aware incremental orbit SA warm starts)
+    (2048, 4): (1, 63),              # MPL 21.3385, D 32
+    (2048, 6): (1, 176, 545),        # MPL 8.6527, D 13
+    (2048, 8): (1, 540, 598, 933),   # MPL 5.9130, D 9
+    (4096, 4): (1, 90),              # MPL 30.1722, D 45
+    (4096, 6): (1, 770, 1846),       # MPL 10.9243, D 16
+    (4096, 8): (1, 652, 1651, 1911),  # MPL 7.0855, D 11
 }

@@ -17,6 +17,7 @@ __all__ = [
     "apsp",
     "apsp_hops",
     "IncrementalAPSP",
+    "SymmetricAPSP",
     "mpl",
     "diameter",
     "eccentricities",
@@ -94,22 +95,58 @@ def apsp_hops(adj: np.ndarray, sentinel: int | None = None) -> np.ndarray:
     return _bfs_rows(adj.astype(np.float32), np.arange(n), sentinel if sentinel is not None else n)
 
 
-def _parent_counts(adj: np.ndarray, dist: np.ndarray) -> np.ndarray:
+def _nbr_table(adj: np.ndarray, kmax: int | None = None) -> np.ndarray:
+    """Padded (n, kmax) neighbour table (pad -1) from a boolean adjacency."""
+    n = adj.shape[0]
+    deg = adj.sum(1)
+    kmax = kmax or max(1, int(deg.max()))
+    nbr = np.full((n, kmax), -1, dtype=np.int32)
+    for u in range(n):
+        ws = np.nonzero(adj[u])[0]
+        nbr[u, : len(ws)] = ws
+    return nbr
+
+
+def _parent_counts(adj: np.ndarray, dist: np.ndarray, nbr: np.ndarray | None = None) -> np.ndarray:
     """npar[s, x] = number of BFS-DAG parents of x w.r.t. source s.
 
     A neighbour w of x is a parent when dist[s, w] + 1 == dist[s, x].  Used
-    for the exact edge-removal test: deleting edge (a, b) changes distances
-    from s iff it is the *sole* parent edge of one endpoint.
+    for the exact edge-removal test: deleting a set of edges changes
+    distances from s iff some vertex loses *all* of its parent edges.
+    ``dist`` may be row-restricted (shape (n_sources, n)); the counts are
+    returned with the same shape.  Passing the maintained ``nbr`` table
+    avoids rebuilding it (the counts come from a vectorized gather over it).
     """
-    n = dist.shape[0]
-    us, vs = np.nonzero(np.triu(adj))
-    npar = np.zeros((n, n), dtype=np.int16)
-    du = dist[:, us]
-    dv = dist[:, vs]
-    npar_t = npar.T
-    np.add.at(npar_t, vs, (du + 1 == dv).T)  # u is a parent of v
-    np.add.at(npar_t, us, (dv + 1 == du).T)  # v is a parent of u
-    return npar
+    if nbr is None:
+        nbr = _nbr_table(adj)
+    valid = nbr >= 0
+    nb = np.where(valid, nbr, 0)
+    return (((dist[:, nb] + np.int32(1)) == dist[:, :, None]) & valid[None, :, :]) \
+        .sum(-1, dtype=np.int16)
+
+
+def _removal_affected(dist: np.ndarray, npar: np.ndarray, removed) -> np.ndarray:
+    """Boolean mask over the source rows of ``dist``: rows whose distances
+    change when the ``removed`` edges are all deleted simultaneously.
+
+    Exact batched test: per source, count how many removed edges are BFS-DAG
+    parent edges of each endpoint vertex; the row is affected iff some vertex
+    loses every parent it had (count == npar).  If an endpoint keeps a
+    parent, every vertex keeps a parent (induction on hop distance) and all
+    old distances stay achievable.  For vertex-disjoint removals this reduces
+    to the classic sole-parent test (npar == 1).
+    """
+    aff = np.zeros(dist.shape[0], dtype=bool)
+    lost: dict[int, np.ndarray] = {}
+    for a, b in removed:
+        da, db = dist[:, a], dist[:, b]
+        pa_of_b = (da + 1 == db).astype(np.int16)
+        pa_of_a = (db + 1 == da).astype(np.int16)
+        lost[b] = pa_of_b if b not in lost else lost[b] + pa_of_b
+        lost[a] = pa_of_a if a not in lost else lost[a] + pa_of_a
+    for x, cnt in lost.items():
+        aff |= (cnt > 0) & (cnt == npar[:, x])
+    return aff
 
 
 @dataclasses.dataclass
@@ -195,7 +232,7 @@ class IncrementalAPSP:
             self.fast.parent_counts(self.nbr, self.dist, self.npar)
         else:
             self.dist[...] = _bfs_rows(self.a32, np.arange(n), n)
-            self.npar[...] = _parent_counts(self.adj, self.dist)
+            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
         self.total = int(self.dist.sum(dtype=np.int64))
         self.diam = int(self.dist.max())
         self.n_delta = 0
@@ -203,13 +240,7 @@ class IncrementalAPSP:
 
     def _build_nbr(self, kmax: int | None = None) -> np.ndarray:
         """Padded (n, kmax) neighbour table for the C kernel (pad -1)."""
-        deg = self.adj.sum(1)
-        kmax = kmax or max(1, int(deg.max()))
-        nbr = np.full((self.n, kmax), -1, dtype=np.int32)
-        for u in range(self.n):
-            ws = np.nonzero(self.adj[u])[0]
-            nbr[u, : len(ws)] = ws
-        return nbr
+        return _nbr_table(self.adj, kmax)
 
     def _refresh_nbr_rows(self, verts) -> None:
         for u in set(verts):
@@ -240,21 +271,28 @@ class IncrementalAPSP:
         return out
 
     # -- swap evaluation ---------------------------------------------------
+    # (a32 is None on SymmetricAPSP's C path, which shares these helpers)
     def _apply_edges(self, removed, added) -> None:
         for u, v in removed:
             self.adj[u, v] = self.adj[v, u] = False
-            self.a32[u, v] = self.a32[v, u] = 0.0
         for u, v in added:
             self.adj[u, v] = self.adj[v, u] = True
-            self.a32[u, v] = self.a32[v, u] = 1.0
+        if self.a32 is not None:
+            for u, v in removed:
+                self.a32[u, v] = self.a32[v, u] = 0.0
+            for u, v in added:
+                self.a32[u, v] = self.a32[v, u] = 1.0
 
     def _revert_edges(self, removed, added) -> None:
         for u, v in added:
             self.adj[u, v] = self.adj[v, u] = False
-            self.a32[u, v] = self.a32[v, u] = 0.0
         for u, v in removed:
             self.adj[u, v] = self.adj[v, u] = True
-            self.a32[u, v] = self.a32[v, u] = 1.0
+        if self.a32 is not None:
+            for u, v in added:
+                self.a32[u, v] = self.a32[v, u] = 0.0
+            for u, v in removed:
+                self.a32[u, v] = self.a32[v, u] = 1.0
 
     def evaluate_swap(
         self,
@@ -264,8 +302,11 @@ class IncrementalAPSP:
     ) -> SwapToken:
         """Price the swap; returns a token (``commit`` applies it).
 
-        Preconditions (asserted): removed edges exist, added edges do not,
-        and no vertex appears in two removed or two added edges.  With
+        Preconditions (asserted): removed edges exist and added edges do
+        not.  The edge lists may be arbitrarily long and may share vertices
+        (batched multi-edge changes — e.g. whole rotation orbits): the
+        removal test counts lost parent edges per vertex exactly.  The
+        2-out/2-in case takes the C fast path when compiled.  With
         ``want_diameter=False`` the C path may defer the diameter max-pass
         (token.diam == -1) — ``commit`` computes it lazily; hot loops that
         only need the MPL for accept/reject use this.
@@ -274,7 +315,10 @@ class IncrementalAPSP:
         assert all(self.adj[u, v] for u, v in removed)
         assert all(not self.adj[u, v] for u, v in added)
 
-        if self.fast is not None and len(removed) == 2 and len(added) == 2:
+        # the C 2+2 fast path tests each removed edge independently (exact
+        # only when they share no vertex); batched shapes take the numpy path
+        if self.fast is not None and len(removed) == 2 and len(added) == 2 \
+                and len({v for e in removed for v in e}) == 4:
             (self._rem_buf[0], self._rem_buf[1]), (self._rem_buf[2], self._rem_buf[3]) = removed
             (self._add_buf[0], self._add_buf[1]), (self._add_buf[2], self._add_buf[3]) = added
             new = np.empty((n, n), dtype=np.int32)
@@ -294,15 +338,14 @@ class IncrementalAPSP:
                 mpl = total / (n * (n - 1)) if diam < self.sentinel else float("inf")
             return SwapToken(tuple(removed), tuple(added), new, total, diam, mpl)
 
-        # exact removal-affected sources (sole-parent test)
-        aff = np.zeros(n, dtype=bool)
-        for a, b in removed:
-            da, db = dist[:, a], dist[:, b]
-            aff |= (da + 1 == db) & (self.npar[:, b] == 1)
-            aff |= (db + 1 == da) & (self.npar[:, a] == 1)
+        # exact removal-affected sources (batched lost-parent test); a
+        # disconnected base forces the full path, matching the C branch so
+        # the n_delta/n_full counters stay identical across kernels
+        aff = _removal_affected(dist, self.npar, removed)
         n_aff = int(aff.sum())
 
-        if self.force_full or n_aff > self.full_rebuild_frac * n:
+        if self.force_full or not self.connected \
+                or n_aff > self.full_rebuild_frac * n:
             self.n_full += 1
             self._apply_edges(removed, added)
             try:
@@ -348,7 +391,7 @@ class IncrementalAPSP:
         if self.fast is not None:
             self.fast.parent_counts(self.nbr, self.dist, self.npar)
         else:
-            self.npar[...] = _parent_counts(self.adj, self.dist)
+            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
 
     def reset(self) -> None:
         """Re-derive all state from the (externally rewritten) adjacency."""
@@ -359,7 +402,7 @@ class IncrementalAPSP:
             self.fast.parent_counts(self.nbr, self.dist, self.npar)
         else:
             self.dist[...] = _bfs_rows(self.a32, np.arange(self.n), self.sentinel)
-            self.npar[...] = _parent_counts(self.adj, self.dist)
+            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
         self.total = int(self.dist.sum(dtype=np.int64))
         self.diam = int(self.dist.max())
 
@@ -382,6 +425,251 @@ class IncrementalAPSP:
         assert np.array_equal(self.dist, ref), "incremental dist diverged"
         assert self.total == int(ref.sum(dtype=np.int64))
         assert self.diam == int(ref.max())
+        assert np.array_equal(self.npar, _parent_counts(self.adj, self.dist))
+
+
+# --------------------------------------------------------------------------------
+# Symmetry-aware incremental APSP (the orbit-level search engine's hot path)
+# --------------------------------------------------------------------------------
+
+class SymmetricAPSP:
+    """Row-restricted incremental APSP for rotationally symmetric graphs.
+
+    For a graph on ``n`` vertices invariant under rotation by ``shift``
+    (``fold = n // shift`` symmetric copies), every distance follows from the
+    rows of the ``shift`` representative sources ``0..shift-1``:
+
+        d(x, y) = d(x mod shift, (y - (x - x mod shift)) mod n)
+
+    so the evaluator maintains exactly those rows (int32, sentinel ``n``)
+    plus their BFS-DAG parent counts, and prices *orbit-level* edge swaps —
+    batched multi-edge removals and insertions whose edge sets are unions of
+    rotation orbits, so the graph stays symmetric — by delta evaluation:
+
+    1. removals: the exact batched lost-parent test (``_removal_affected``)
+       selects the affected representative rows, which are repaired by BFS on
+       the graph minus the removed orbits; unaffected rows are provably
+       unchanged.
+    2. insertions: a min-plus patch through the added-edge endpoints.  The
+       post-removal graph is still symmetric, so the full rows of arbitrary
+       endpoints are rotations of representative rows; a Floyd–Warshall
+       closure over the <= 2 * n_added endpoints gives the exact new
+       endpoint-to-endpoint distances, and one vectorized pass per
+       representative row applies
+       ``d'(r, y) = min(d(r, y), min_{p,q} d(r, p) + D(p, q) + d(q, y))``.
+
+    ``total`` is the representative-row total: the full-matrix total is
+    ``fold * total``, MPL = total / (shift * (n - 1)), and the row maxima
+    realise the global diameter (every row is a rotation of a representative
+    row).  A C kernel (``_fastpath.eval_orbit_swap``) accelerates both
+    phases; the numpy fallback is bit-identical (asserted by the property
+    tests).  ``n_delta`` / ``n_full`` count the two pricing paths.
+    """
+
+    def __init__(
+        self,
+        adj: np.ndarray,
+        shift: int,
+        full_rebuild_frac: float = 0.9,
+        force_full: bool = False,
+        use_c: bool | None = None,
+    ):
+        from . import _fastpath
+
+        n = adj.shape[0]
+        if shift < 1 or n % shift:
+            raise ValueError(f"shift={shift} must be a positive divisor of n={n}")
+        self.n = n
+        self.s = shift
+        self.fold = n // shift
+        self.sentinel = n
+        self.full_rebuild_frac = full_rebuild_frac
+        self.force_full = force_full
+        self.adj = adj if adj.dtype == np.bool_ else adj.astype(bool)
+        if not np.array_equal(self.adj, np.roll(np.roll(self.adj, shift, 0), shift, 1)):
+            raise ValueError(f"adjacency is not invariant under rotation by {shift}")
+        self.fast = None
+        if use_c or use_c is None:
+            lib = _fastpath.get_lib()
+            if lib is not None:
+                self.fast = _fastpath.FastEval(lib)
+            elif use_c:
+                raise RuntimeError("C fast path requested but unavailable")
+        # the float32 adjacency mirror feeds only the numpy-fallback matmul
+        # BFS: with the C kernel active it would be (n, n) of dead weight
+        # (64 MB at N=4096), so it exists only on the fallback path
+        self.a32 = None
+        if self.fast is None:
+            self.a32 = np.empty((n, n), dtype=np.float32)
+            self.a32[...] = self.adj
+        # zero-init required: the C kernel epoch-stamps part of this buffer
+        self._scratch = np.zeros(8 * n, dtype=np.int32)
+        self._work = np.empty(0, dtype=np.int32)
+        self.nbr = self._build_nbr()
+        self.dist = np.empty((shift, n), dtype=np.int32)
+        self.npar = np.empty((shift, n), dtype=np.int16)
+        if self.fast is not None:
+            self.fast.apsp_rows(self.nbr, self.dist, self._scratch)
+            self.fast.parent_counts(self.nbr, self.dist, self.npar)
+        else:
+            self.dist[...] = _bfs_rows(self.a32, np.arange(shift), n)
+            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
+        self.total = int(self.dist.sum(dtype=np.int64))
+        self.diam = int(self.dist.max())
+        self.n_delta = 0
+        self.n_full = 0
+
+    _build_nbr = IncrementalAPSP._build_nbr
+    _refresh_nbr_rows = IncrementalAPSP._refresh_nbr_rows
+    _apply_edges = IncrementalAPSP._apply_edges
+    _revert_edges = IncrementalAPSP._revert_edges
+
+    # -- public state ------------------------------------------------------
+    @property
+    def connected(self) -> bool:
+        return self.diam < self.sentinel
+
+    def mpl(self) -> float:
+        if not self.connected:
+            return float("inf")
+        return self.total / (self.s * (self.n - 1))
+
+    def diameter(self) -> float:
+        return float(self.diam) if self.connected else float("inf")
+
+    # -- swap evaluation ---------------------------------------------------
+    def _check_orbit_closed(self, edges, kind: str) -> None:
+        n, s = self.n, self.s
+        es = {(min(u, v), max(u, v)) for u, v in edges}
+        for u, v in es:
+            a, b = (u + s) % n, (v + s) % n
+            if (min(a, b), max(a, b)) not in es:
+                raise ValueError(
+                    f"{kind} edge set is not closed under rotation by {s}: "
+                    f"({u},{v}) rotates to ({a},{b})")
+
+    def evaluate_swap(self, removed, added) -> SwapToken:
+        """Price a batched orbit swap; returns a token (``commit`` applies it).
+
+        ``removed`` / ``added`` are edge lists that must each be unions of
+        rotation orbits (validated), with removed edges present and added
+        edges absent.  Distances, total, diameter and MPL in the token are
+        exact for the post-swap graph.
+        """
+        n, s = self.n, self.s
+        self._check_orbit_closed(removed, "removed")
+        self._check_orbit_closed(added, "added")
+        assert all(self.adj[u, v] for u, v in removed)
+        assert all(not self.adj[u, v] for u, v in added)
+
+        # a disconnected base state invalidates the sentinel-coded parent
+        # counts used by the delta tests: force the full rebuild (mirrors the
+        # C kernel decision exactly so both paths stay bit-identical)
+        force = self.force_full or not self.connected
+
+        if self.fast is not None:
+            new = np.empty((s, n), dtype=np.int32)
+            nap = len({x for e in added for x in e})
+            nrp = len({x for e in removed for x in e})
+            need = nap * (n + nap + 2) + nrp
+            if len(self._work) < need:
+                self._work = np.empty(need, dtype=np.int32)
+            naff, total, diam = self.fast.eval_orbit_swap(
+                self.nbr, self.dist, self.npar, removed, added,
+                force, self.full_rebuild_frac, new, self._scratch, self._work)
+            if naff < 0:
+                self.n_full += 1
+            else:
+                self.n_delta += 1
+            mpl = total / (s * (n - 1)) if diam < self.sentinel else float("inf")
+            return SwapToken(tuple(removed), tuple(added), new, total, diam, mpl)
+
+        aff = _removal_affected(self.dist, self.npar, removed)
+        n_aff = int(aff.sum())
+        if force or n_aff > self.full_rebuild_frac * s:
+            self.n_full += 1
+            self._apply_edges(removed, added)
+            try:
+                new = _bfs_rows(self.a32, np.arange(s), self.sentinel)
+            finally:
+                self._revert_edges(removed, added)
+            return self._token(removed, added, new)
+
+        self.n_delta += 1
+        new = self.dist.copy()
+        if n_aff:
+            # repair on the graph minus removed orbits (still symmetric)
+            for u, v in removed:
+                self.a32[u, v] = self.a32[v, u] = 0.0
+            try:
+                rows = _bfs_rows(self.a32, np.nonzero(aff)[0], self.sentinel)
+            finally:
+                for u, v in removed:
+                    self.a32[u, v] = self.a32[v, u] = 1.0
+            new[aff, :] = rows
+        if added:
+            self._insert_patch(new, added)
+        return self._token(removed, added, new)
+
+    def _insert_patch(self, new: np.ndarray, added) -> None:
+        """Exact batched edge-insert patch on the representative rows.
+
+        ``new`` holds the post-removal rows of a graph that is symmetric
+        under rotation by ``self.s``; the full row of any added-edge endpoint
+        is a rotation of a representative row, so the min-plus closure over
+        the endpoints is computable without the other n - s rows.
+        """
+        n, s = self.n, self.s
+        pts = sorted({x for e in added for x in e})
+        m = len(pts)
+        # rolled post-removal rows of the endpoints: crows[i, y] = d_rm(p_i, y)
+        crows = np.empty((m, n), dtype=np.int32)
+        for i, p in enumerate(pts):
+            crows[i] = np.roll(new[p % s], p - p % s)
+        # endpoint-to-endpoint closure with the added edges as weight-1 links
+        w = crows[:, pts].copy()
+        idx = {p: i for i, p in enumerate(pts)}
+        for u, v in added:
+            iu, iv = idx[u], idx[v]
+            if w[iu, iv] > 1:
+                w[iu, iv] = w[iv, iu] = 1
+        for k in range(m):
+            np.minimum(w, w[:, k : k + 1] + w[k : k + 1, :], out=w)
+        # d'(r, y) = min(d_rm(r, y), min_q [min_p d_rm(r, p) + w(p, q)] + d_rm(q, y))
+        a = new[:, pts]  # (s, m) — snapshot: broadcasting below reads `new`
+        tmp = (a[:, :, None] + w[None, :, :]).min(axis=1)  # (s, m)
+        for j in range(m):
+            np.minimum(new, tmp[:, j : j + 1] + crows[j][None, :], out=new)
+
+    def _token(self, removed, added, new: np.ndarray) -> SwapToken:
+        total = int(new.sum(dtype=np.int64))
+        diam = int(new.max())
+        mpl = total / (self.s * (self.n - 1)) if diam < self.sentinel else float("inf")
+        return SwapToken(tuple(removed), tuple(added), new, total, diam, mpl)
+
+    def commit(self, token: SwapToken) -> None:
+        """Apply a previously evaluated orbit swap to the maintained state."""
+        self._apply_edges(token.removed, token.added)
+        self.dist[...] = token.dist
+        self.total = token.total
+        self.diam = token.diam
+        self._refresh_nbr_rows([x for e in (*token.removed, *token.added) for x in e])
+        if self.fast is not None:
+            self.fast.parent_counts(self.nbr, self.dist, self.npar)
+        else:
+            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
+
+    def verify(self) -> None:
+        """Assert internal state equals a from-scratch recompute AND that the
+        symmetry assumption actually holds for the full matrix (tests)."""
+        assert np.array_equal(
+            self.adj, np.roll(np.roll(self.adj, self.s, 0), self.s, 1)
+        ), "adjacency lost its rotational symmetry"
+        ref = apsp_hops(self.adj, self.sentinel)
+        assert np.array_equal(self.dist, ref[: self.s]), "symmetric dist diverged"
+        assert self.total == int(ref[: self.s].sum(dtype=np.int64))
+        assert self.diam == int(ref[: self.s].max()) == int(ref.max())
+        assert self.fold * self.total == int(ref.sum(dtype=np.int64))
         assert np.array_equal(self.npar, _parent_counts(self.adj, self.dist))
 
 

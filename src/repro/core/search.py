@@ -18,10 +18,13 @@ Three search tiers, matching Section 3.1 of the paper:
    shortest-path DAG actually broke, exact O(n^2) patching for inserted
    edges, full recompute only as a guarded fallback.
 3. ``circulant_search`` / ``symmetric_sa_search`` — the rotational-symmetry
-   restricted walks used for the large graphs (252/256/264 and now
-   512/1024 vertices): circulant offset-set hillclimb priced by an implicit
+   restricted walks used for the large graphs (252/256/264 and now up to
+   4096 vertices): circulant offset-set hillclimb priced by an implicit
    np.roll BFS (no graph materialisation per candidate), plus orbit-level SA
-   that can warm-start from the best circulant (``large_search``).
+   that can warm-start from the best circulant (``large_search``).  The
+   orbit SA prices each orbit swap through ``metrics.SymmetricAPSP`` —
+   batched multi-edge delta updates from only the n/fold representative
+   sources — instead of a dense BFS per proposal.
 
 Every function takes an explicit ``seed`` and is bit-reproducible (the
 optional C kernel and the pure-python fallback consume identical pre-drawn
@@ -678,6 +681,7 @@ def symmetric_sa_search(
     t_end: float = 1e-4,
     target_mpl: float | None = None,
     start_orbits: set[frozenset[tuple[int, int]]] | None = None,
+    incremental: bool = True,
 ) -> SearchResult:
     """SA over *orbit-level* edge swaps of graphs with ``fold``-fold
     rotational symmetry (paper: 'random iteration of Hamiltonian graphs with
@@ -687,9 +691,23 @@ def symmetric_sa_search(
     search space shrinks by ~fold× and every accepted design is symmetric —
     the paper's engineering-feasibility requirement.  ``start_orbits`` (e.g.
     from ``_circulant_orbits`` of a good circulant) warm-starts the walk.
+
+    With ``incremental=True`` (the default) proposals are priced by
+    ``metrics.SymmetricAPSP`` — distances delta-updated from only the
+    ``n/fold`` representative sources, batched over the whole orbit swap —
+    which is what makes the N=2048/4096 polish tier run in seconds.
+    ``incremental=False`` keeps the seed dense-BFS pricing
+    (``_mpl_fast`` from ``s`` sources per proposal); both paths consume the
+    PRNG identically and the evaluator is exact, so the two trajectories are
+    bit-identical per seed (asserted in tests and measured by the
+    ``polish_*`` rows of ``benchmarks/bench_search.py``).
     """
-    if n % fold:
-        raise ValueError("fold must divide n")
+    fold_i = int(fold)
+    if fold_i != fold or fold_i < 1 or n % fold_i:
+        raise ValueError(
+            f"fold={fold!r} must be a positive integer divisor of n={n}: a "
+            "non-divisor fold would make the rotation orbits irregular")
+    fold = fold_i
     s = n // fold
     rng = np.random.default_rng(seed)
     orbits = set(start_orbits) if start_orbits is not None else \
@@ -709,7 +727,11 @@ def symmetric_sa_search(
 
     gamma = math.exp(math.log(t_end / t_start) / n_iter)
     adj = adj_of(orbits)
-    cur_mpl, cur_d = _mpl_fast(adj, n_sources=s)
+    ev = metrics.SymmetricAPSP(adj, shift=s) if incremental else None
+    if ev is not None:
+        cur_mpl, cur_d = ev.mpl(), ev.diameter()
+    else:
+        cur_mpl, cur_d = _mpl_fast(adj, n_sources=s)
     best_orbits, best_mpl, best_d = set(orbits), cur_mpl, cur_d
     lb = metrics.mpl_lower_bound(n, k)
     tgt = target_mpl if target_mpl is not None else lb
@@ -748,19 +770,31 @@ def symmetric_sa_search(
             continue
         if new_edges & (remaining | ring_edges):
             continue
-        # mutate adjacency in place on a copy restricted to changed entries
-        a2 = adj.copy()
-        for i, j in set(o1) | set(o2):
-            a2[i, j] = a2[j, i] = False
-        for i, j in new_edges:
-            a2[i, j] = a2[j, i] = True
-        new_mpl, new_d = _mpl_fast(a2, n_sources=s)
+        if ev is not None:
+            # edges in both sets are removed-then-re-added: cancel them (set
+            # differences of orbit-closed sets stay orbit-closed)
+            old_edges = set(o1) | set(o2)
+            tok = ev.evaluate_swap(sorted(old_edges - new_edges),
+                                   sorted(new_edges - old_edges))
+            new_mpl = tok.mpl
+            new_d = float(tok.diam) if tok.diam < n else float("inf")
+        else:
+            # mutate adjacency in place on a copy restricted to changed entries
+            a2 = adj.copy()
+            for i, j in set(o1) | set(o2):
+                a2[i, j] = a2[j, i] = False
+            for i, j in new_edges:
+                a2[i, j] = a2[j, i] = True
+            new_mpl, new_d = _mpl_fast(a2, n_sources=s)
         dm = new_mpl - cur_mpl
         if dm < 0 or rng.random() < math.exp(-dm / max(t, 1e-12)):
             trial = [o for idx, o in enumerate(orb_list) if idx not in (i1, i2)] + [no1, no2]
             orb_list, cur_mpl, cur_d = trial, new_mpl, new_d
             chord_edges = remaining | new_edges
-            adj = a2
+            if ev is not None:
+                ev.commit(tok)
+            else:
+                adj = a2
             accepted += 1
             if (cur_mpl, cur_d) < (best_mpl, best_d):
                 best_orbits, best_mpl, best_d = set(orb_list), cur_mpl, cur_d
@@ -781,6 +815,8 @@ def symmetric_sa_search(
         iterations=n_iter,
         accepted=accepted,
         history=history,
+        evals_delta=ev.n_delta if ev is not None else 0,
+        evals_full=ev.n_full if ev is not None else 0,
     )
 
 
@@ -801,7 +837,10 @@ def large_search(
 
     Returns whichever of the two stages found the lower (MPL, diameter).
     A pinned offset set in ``known_optimal.KNOWN_CIRCULANT_OFFSETS`` skips
-    the hillclimb entirely (seed 0 reproduces the pinning run).
+    the hillclimb entirely (seed 0 reproduces the pinning run).  The polish
+    stage prices orbit swaps through ``metrics.SymmetricAPSP`` (delta updates
+    from the n/fold representative sources), which keeps it practical up to
+    N=4096 — pinned offsets exist for 2048/4096 at degrees 4/6/8.
     """
     from .known_optimal import KNOWN_CIRCULANT_OFFSETS
 

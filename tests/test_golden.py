@@ -1,0 +1,64 @@
+"""Golden regression suite for the paper's named small topologies (N <= 36).
+
+Each row pins the *exact* invariants of a constructor in ``core/graphs.py`` —
+the integer total hop count (sum of all-pairs distances over ordered distinct
+pairs, the strongest anchor: any silent constructor drift changes it), the
+diameter and the bisection width — together with the published TABLE 1 /
+TABLE 2 two-decimal MPL the exact value must round to.  The paper values are
+ground truth; the exact totals were computed from the frozen constructors and
+verified to reproduce every published figure.
+
+If one of these tests fails, a constructor changed behaviour: fix the
+constructor, do not re-pin the golden value.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graphs, metrics
+
+# builder, n, k, diameter, exact_total_hops, paper_mpl_2dp, bisection_width
+GOLDEN = [
+    # paper TABLE 1 (16- and 32-node families)
+    ("(16,2)-Ring", lambda: graphs.ring(16), 16, 2, 8, 1024, 4.27, 2),
+    ("(16,3)-Wagner", lambda: graphs.wagner(16), 16, 3, 4, 624, 2.60, 4),
+    ("(16,3)-Bidiakis", lambda: graphs.bidiakis(16), 16, 3, 5, 608, 2.53, 4),
+    ("(16,4)-Torus", lambda: graphs.torus([4, 4]), 16, 4, 4, 512, 2.13, 8),
+    ("(32,2)-Ring", lambda: graphs.ring(32), 32, 2, 16, 8192, 8.26, 2),
+    ("(32,3)-Wagner", lambda: graphs.wagner(32), 32, 3, 8, 4576, 4.61, 4),
+    ("(32,3)-Bidiakis", lambda: graphs.bidiakis(32), 32, 3, 9, 4032, 4.06, 4),
+    ("(32,4)-Torus", lambda: graphs.torus([4, 8]), 32, 4, 6, 3072, 3.10, 8),
+    ("(32,4)-Chvatal", lambda: graphs.chvatal32(), 32, 4, 4, 2532, 2.55, 8),
+    # classic 12-vertex instances behind the generalized families
+    ("(12,4)-Chvatal", graphs.chvatal, 12, 4, 2, 216, 1.64, 8),
+    ("(12,3)-Bidiakis", lambda: graphs.bidiakis(12), 12, 3, 3, 268, 2.03, 4),
+    # paper TABLE 2 Dragonfly instances (D/MPL published; BW repo-pinned)
+    ("(20,4)-Dragonfly", lambda: graphs.dragonfly(4, 5, 1), 20, 4, 3, 860, 2.26, 8),
+    ("(30,5)-Dragonfly", lambda: graphs.dragonfly(5, 6, 1), 30, 5, 3, 2070, 2.38, 9),
+    ("(36,5)-Dragonfly", lambda: graphs.dragonfly(4, 9, 2), 36, 5, 3, 2952, 2.34, 20),
+]
+
+
+@pytest.mark.parametrize(
+    "builder,n,k,D,total,paper_mpl,bw",
+    [row[1:] for row in GOLDEN],
+    ids=[row[0] for row in GOLDEN],
+)
+def test_golden_invariants(builder, n, k, D, total, paper_mpl, bw):
+    g = builder()
+    assert g.n == n
+    assert g.is_regular() and g.degree() == k
+    d = metrics.apsp(g)
+    got_total = int(d[~np.eye(n, dtype=bool)].sum())
+    assert got_total == total, f"{g.name}: total hops {got_total} != golden {total}"
+    assert metrics.diameter(g, d) == D, g.name
+    # the exact value must reproduce the published two-decimal figure
+    assert round(total / (n * (n - 1)), 2) == pytest.approx(paper_mpl, abs=1e-9), g.name
+    assert metrics.mpl(g, d) == total / (n * (n - 1)), g.name
+    assert metrics.bisection_width(g, restarts=24, seed=0) == bw, g.name
+
+
+def test_golden_rows_cover_the_paper_families():
+    """Every family the paper names at N <= 36 appears in the golden table."""
+    names = " ".join(row[0] for row in GOLDEN)
+    for family in ("Ring", "Wagner", "Bidiakis", "Chvatal", "Torus", "Dragonfly"):
+        assert family in names

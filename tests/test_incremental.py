@@ -1,17 +1,20 @@
-"""Property tests for the incremental APSP evaluator (the search hot path).
+"""Property tests for the incremental APSP evaluators (the search hot paths).
 
-The contract under test: after any valid 2-out/2-in edge swap,
-``IncrementalAPSP.evaluate_swap`` produces *exactly* the distance matrix,
-total, MPL and diameter that a from-scratch ``metrics.apsp`` recompute
-yields — on the delta path, the forced-full path, the C kernel and the pure
-numpy fallback alike, including swaps that disconnect the graph.
+The contract under test: after any valid edge swap — a 2-out/2-in chord swap
+on ``IncrementalAPSP``, a batched multi-edge change (edges may share
+vertices), or an orbit-level swap on the row-restricted ``SymmetricAPSP`` —
+``evaluate_swap`` produces *exactly* the distance rows, total, MPL and
+diameter that a from-scratch ``metrics.apsp`` recompute yields: on the delta
+path, the forced-full path, the C kernel and the pure numpy fallback alike,
+including swaps that disconnect the graph.
 """
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import metrics
-from repro.core.graphs import from_edges, random_hamiltonian_regular, ring
+from repro.core.graphs import circulant, from_edges, random_hamiltonian_regular, ring
+from repro.core.search import _orbit
 
 
 def _swap_space(n):
@@ -135,6 +138,174 @@ def test_disconnecting_swap_reports_inf_and_recovers():
     # disconnected base forces the full-recompute fallback on the next swap
     tok2 = ev.evaluate_swap([(0, 2), (4, 6)], [(0, 4), (2, 6)])
     assert ev.n_full >= 1
+    assert tok2.mpl < float("inf")
+    ev.commit(tok2)
+    ev.verify()
+    assert ev.connected
+
+
+# ------------------------------------------------------------------------------
+# Batched multi-edge changes and the symmetry-aware orbit evaluator
+# ------------------------------------------------------------------------------
+
+def _random_orbit_swap(ev, rng):
+    """A random orbit-level edge swap on a SymmetricAPSP's current graph:
+    (removed, added) lists that are orbit-closed, with overlap cancelled, or
+    None when the draw is invalid.  Mirrors symmetric_sa_search proposals."""
+    n, s = ev.n, ev.s
+    fold = ev.fold
+    iu, ju = np.nonzero(np.triu(ev.adj))
+    e1, e2 = rng.choice(len(iu), size=2, replace=False)
+    o1 = _orbit(n, s, int(iu[e1]), int(ju[e1]))
+    o2 = _orbit(n, s, int(iu[e2]), int(ju[e2]))
+    if o1 == o2:
+        return None
+    (u1, v1), (u2, v2) = next(iter(o1)), next(iter(o2))
+    tshift = int(rng.integers(fold)) * s
+    if rng.integers(2):
+        na, nb = (u1, (v2 + tshift) % n), ((u2 + tshift) % n, v1)
+    else:
+        na, nb = (u1, (u2 + tshift) % n), (v1, (v2 + tshift) % n)
+    if na[0] == na[1] or nb[0] == nb[1]:
+        return None
+    new_edges = set(_orbit(n, s, *na)) | set(_orbit(n, s, *nb))
+    cur = {(int(u), int(v)) for u, v in zip(iu, ju)}
+    old_edges = set(o1) | set(o2)
+    if new_edges & (cur - old_edges):
+        return None
+    removed = sorted(old_edges - new_edges)
+    added = sorted(new_edges - old_edges)
+    if not removed and not added:
+        return None
+    return removed, added
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(12, 3), (16, 4), (24, 4), (24, 6), (30, 5)]),
+       st.integers(0, 10_000))
+def test_orbit_delta_matches_full_recompute(shape, swap_seed):
+    """SymmetricAPSP orbit swaps == from-scratch BFS rows, delta and forced
+    full paths, including disconnecting swaps and recovery."""
+    s, fold = shape
+    n = s * fold
+    rng = np.random.default_rng(swap_seed)
+    offs = [1] + sorted(rng.choice(range(2, n // 2), size=2, replace=False).tolist())
+    adj = circulant(n, offs).adjacency()
+    ev = metrics.SymmetricAPSP(adj.copy(), shift=s, full_rebuild_frac=1.1)
+    ev_full = metrics.SymmetricAPSP(adj.copy(), shift=s, force_full=True)
+    for _ in range(6):
+        swap = _random_orbit_swap(ev, rng)
+        if swap is None:
+            continue
+        removed, added = swap
+        ref = _reference(ev.adj, removed, added)[: s]
+        tok = ev.evaluate_swap(removed, added)
+        tok_full = ev_full.evaluate_swap(removed, added)
+        assert np.array_equal(tok.dist, ref)
+        assert np.array_equal(tok_full.dist, ref)
+        assert tok.total == tok_full.total == int(ref.sum(dtype=np.int64))
+        assert tok.mpl == tok_full.mpl and tok.diam == tok_full.diam
+        if rng.random() < 0.7:
+            ev.commit(tok)
+            ev_full.commit(tok_full)
+            ev.verify()
+            ev_full.verify()
+    if ev.connected:
+        # frac > 1 and connected base: everything priced on the delta path
+        assert ev.n_full == 0 or ev.n_delta > 0
+    assert ev_full.n_delta == 0 and ev_full.n_full > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([(12, 3), (16, 4), (24, 4), (24, 6)]),
+       st.integers(0, 10_000))
+def test_orbit_c_and_numpy_paths_identical(shape, swap_seed):
+    """The orbit-delta C kernel and the numpy fallback are bit-identical."""
+    s, fold = shape
+    n = s * fold
+    rng = np.random.default_rng(swap_seed)
+    offs = [1] + sorted(rng.choice(range(2, n // 2), size=2, replace=False).tolist())
+    adj = circulant(n, offs).adjacency()
+    ev_c = metrics.SymmetricAPSP(adj.copy(), shift=s)
+    if ev_c.fast is None:
+        pytest.skip("no C compiler in this environment")
+    ev_np = metrics.SymmetricAPSP(adj.copy(), shift=s, use_c=False)
+    for _ in range(6):
+        swap = _random_orbit_swap(ev_c, rng)
+        if swap is None:
+            continue
+        tc = ev_c.evaluate_swap(*swap)
+        tn = ev_np.evaluate_swap(*swap)
+        assert np.array_equal(tc.dist, tn.dist)
+        assert tc.total == tn.total and tc.diam == tn.diam and tc.mpl == tn.mpl
+        assert ev_c.n_delta == ev_np.n_delta and ev_c.n_full == ev_np.n_full
+        if rng.random() < 0.5:
+            ev_c.commit(tc)
+            ev_np.commit(tn)
+            assert np.array_equal(ev_c.npar, ev_np.npar)
+            assert ev_c.diam == ev_np.diam and ev_c.total == ev_np.total
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(12, 26), st.integers(0, 10_000))
+def test_batched_multiedge_matches_full_recompute(n, swap_seed):
+    """IncrementalAPSP with arbitrary batched edge lists (shared vertices
+    allowed) == from-scratch recompute — the generalized cascade contract."""
+    rng = np.random.default_rng(swap_seed)
+    try:
+        g = random_hamiltonian_regular(n, 4, seed=swap_seed)
+    except RuntimeError:
+        return
+    ev = metrics.IncrementalAPSP(g.adjacency().copy(), use_c=False)
+    for _ in range(4):
+        iu, ju = np.nonzero(np.triu(ev.adj))
+        m = int(rng.integers(1, min(5, len(iu))))
+        picks = rng.choice(len(iu), size=m, replace=False)
+        removed = [(int(iu[e]), int(ju[e])) for e in picks]
+        absent = np.argwhere(np.triu(~ev.adj, k=1))
+        adds = rng.choice(len(absent), size=int(rng.integers(0, 4)), replace=False)
+        added = [(int(a), int(b)) for a, b in absent[adds]]
+        ref = _reference(ev.adj, removed, added)
+        tok = ev.evaluate_swap(removed, added)
+        assert np.array_equal(tok.dist, ref)
+        assert tok.total == int(ref.sum(dtype=np.int64))
+        if rng.random() < 0.6:
+            ev.commit(tok)
+            ev.verify()
+
+
+def test_symmetric_evaluator_rejects_asymmetric_input():
+    adj = circulant(24, [1, 5]).adjacency()
+    adj[0, 9] = adj[9, 0] = True  # break the rotational symmetry
+    with pytest.raises(ValueError, match="not invariant"):
+        metrics.SymmetricAPSP(adj, shift=6)
+    with pytest.raises(ValueError, match="divisor"):
+        metrics.SymmetricAPSP(circulant(24, [1, 5]).adjacency(), shift=7)
+
+
+def test_symmetric_evaluator_rejects_non_orbit_swap():
+    ev = metrics.SymmetricAPSP(circulant(24, [1, 5]).adjacency(), shift=6)
+    with pytest.raises(ValueError, match="not closed"):
+        ev.evaluate_swap([(0, 5)], [])  # single edge, orbit has 4
+    with pytest.raises(ValueError, match="not closed"):
+        ev.evaluate_swap([], [(0, 9)])
+
+
+def test_orbit_disconnecting_swap_reports_inf_and_recovers():
+    """Removing the ring orbit disconnects C_24(1,8) rows -> inf; the next
+    (forced-full) swap restores it — both paths stay exact throughout."""
+    n, s = 24, 6
+    ev = metrics.SymmetricAPSP(circulant(n, [1, 8]).adjacency(), shift=s)
+    ring_orbit = sorted({(i, (i + 1) % n) if i + 1 < n else (0, n - 1)
+                         for i in range(n)})
+    tok = ev.evaluate_swap(ring_orbit, [])
+    assert tok.mpl == float("inf")
+    assert np.array_equal(tok.dist, _reference(ev.adj, ring_orbit, [])[: s])
+    ev.commit(tok)
+    ev.verify()
+    assert not ev.connected and ev.mpl() == float("inf")
+    tok2 = ev.evaluate_swap([], ring_orbit)
+    assert ev.n_full >= 1  # disconnected base forces the full path
     assert tok2.mpl < float("inf")
     ev.commit(tok2)
     ev.verify()

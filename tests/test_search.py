@@ -134,6 +134,60 @@ def test_symmetric_sa_256_bound_gap():
         assert (min(a, b), max(a, b)) in es
 
 
+@pytest.mark.parametrize("bad_fold", [0, -2, 3, 5, 7, 2.5, 100])
+def test_symmetric_sa_invalid_fold_raises(bad_fold):
+    """fold values that do not divide n (or are not positive integers) must
+    raise a clear ValueError instead of building an irregular orbit walk."""
+    with pytest.raises(ValueError, match="fold"):
+        search.symmetric_sa_search(16, 4, seed=0, n_iter=10, fold=bad_fold)
+
+
+def test_symmetric_sa_engine_matches_dense_trajectory():
+    """The SymmetricAPSP-priced orbit SA follows the exact trajectory of the
+    seed dense-BFS pricing (same seed, same PRNG consumption): the engine can
+    never return a worse graph than the seed path."""
+    for n, k, fold, seed in [(48, 4, 4, 0), (64, 6, 4, 3)]:
+        a = search.symmetric_sa_search(n, k, seed=seed, n_iter=300, fold=fold,
+                                       incremental=True)
+        b = search.symmetric_sa_search(n, k, seed=seed, n_iter=300, fold=fold,
+                                       incremental=False)
+        assert a.graph.edges == b.graph.edges
+        assert a.mpl == b.mpl and a.diameter == b.diameter
+        assert a.accepted == b.accepted and a.history == b.history
+        assert a.evals_delta + a.evals_full > 0  # engine actually priced
+
+
+def test_symmetric_sa_engine_uses_delta_evaluation_at_scale():
+    """At large N the orbit engine must carry the load on the delta path."""
+    from repro.core.known_optimal import KNOWN_CIRCULANT_OFFSETS
+    from repro.core.search import _circulant_orbits
+
+    n, k, fold = 2048, 6, 8
+    orbits = _circulant_orbits(n, n // fold, KNOWN_CIRCULANT_OFFSETS[(n, k)])
+    res = search.symmetric_sa_search(n, k, seed=0, n_iter=20, fold=fold,
+                                     start_orbits=orbits)
+    assert res.evals_delta > 0
+    assert res.evals_delta >= res.evals_full
+    assert res.graph.degree() == k and res.graph.n == n
+
+
+@pytest.mark.slow
+def test_large_search_4096_pinned_polish_fast():
+    """Acceptance gate: the pinned-circulant + orbit-polish tier reaches
+    N=4096 in seconds and never degrades below its circulant warm start."""
+    import time
+
+    from repro.core.known_optimal import KNOWN_CIRCULANT_OFFSETS
+
+    assert (4096, 8) in KNOWN_CIRCULANT_OFFSETS
+    t0 = time.perf_counter()
+    res = search.large_search(4096, 8, seed=0, budget=30)
+    dt = time.perf_counter() - t0
+    assert dt < 120
+    assert res.graph.n == 4096 and res.graph.degree() == 8
+    assert res.mpl <= 7.0855 + 1e-9  # the pinned circulant MPL
+
+
 def test_known_optimal_targets_table():
     # table stores the paper's 2-decimal values; (32,4) = 2.35 *is* the Cerf
     # bound 2.3548 rounded down, hence the 0.01 slack
