@@ -19,7 +19,10 @@ tier.  Emits the usual CSV rows AND a machine-readable
 (``metrics.SymmetricAPSP`` delta pricing) against the seed dense-BFS orbit SA
 (``_mpl_fast`` from n/fold sources per proposal) at equal iteration count and
 seed; the two trajectories are bit-identical, so ``engine_mpl == mpl`` and
-``speedup`` isolates the evaluator.
+``speedup`` isolates the evaluator.  The N >= 8192 rows pin
+``engine="bitset"`` (the word-packed frontier sweep) and record the engine in
+the row's ``engine`` field.  The full schema reference lives in
+docs/BENCHMARKS.md.
 """
 import json
 import math
@@ -166,15 +169,23 @@ def run(smoke: bool = False) -> common.Rows:
     # --- large-N polish tier: incremental orbit SA vs seed dense-BFS orbit SA
     # (equal iteration count, same seed and warm start: the trajectories are
     # bit-identical, so the MPL columns must agree and speedup isolates the
-    # SymmetricAPSP evaluator)
-    polish_cases = [(2048, 6, 8, 12)] if smoke else [(2048, 6, 8, 40), (4096, 8, 8, 24)]
-    for (n, k, fold, iters) in polish_cases:
+    # SymmetricAPSP evaluator).  N >= 8192 rows pin engine="bitset" — the
+    # word-packed frontier sweep — so the row tracks the bitset backend
+    # specifically (auto rows track whatever the machine resolves to).
+    # smoke keeps the 8192 row affordable for per-PR CI: fold=16 halves the
+    # dense baseline's per-proposal BFS (512 representative sources, ~8 s
+    # each) while still demonstrating the bitset-vs-dense speedup contract
+    polish_cases = [(2048, 6, 8, 12, None), (8192, 8, 16, 6, "bitset")] if smoke \
+        else [(2048, 6, 8, 40, None), (4096, 8, 8, 24, None),
+              (8192, 8, 8, 12, "bitset"), (16384, 8, 16, 6, "bitset")]
+    for (n, k, fold, iters, engine) in polish_cases:
         lb = metrics.mpl_lower_bound(n, k)
         offs = KNOWN_CIRCULANT_OFFSETS[(n, k)]
         orbits = search._circulant_orbits(n, n // fold, offs)
         t0 = time.perf_counter()
         res = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
-                                         start_orbits=orbits, incremental=True)
+                                         start_orbits=orbits, incremental=True,
+                                         engine=engine)
         engine_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         res_seed = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
@@ -182,13 +193,13 @@ def run(smoke: bool = False) -> common.Rows:
         seed_s = time.perf_counter() - t0
         speedup = seed_s / engine_s if engine_s > 0 else float("inf")
         rows.add(f"polish_n{n}_k{k}", engine_s,
-                 f"{iters} orbit iters fold={fold} engine={engine_s:.3f}s "
-                 f"seed={seed_s:.3f}s speedup={speedup:.1f}x mpl={res.mpl:.4f} "
-                 f"(seed {res_seed.mpl:.4f}) lb={lb:.4f} "
+                 f"{iters} orbit iters fold={fold} engine={engine or 'auto'} "
+                 f"{engine_s:.3f}s seed={seed_s:.3f}s speedup={speedup:.1f}x "
+                 f"mpl={res.mpl:.4f} (seed {res_seed.mpl:.4f}) lb={lb:.4f} "
                  f"delta={res.evals_delta} full={res.evals_full}")
         results.append({
             "name": f"polish_n{n}_k{k}", "n": n, "k": k, "fold": fold,
-            "iters": iters,
+            "iters": iters, "engine": engine or "auto",
             "engine_s": round(engine_s, 4), "seed_s": round(seed_s, 4),
             "speedup": round(speedup, 2),
             "engine_mpl": res.mpl, "mpl": res_seed.mpl, "seed_mpl": res_seed.mpl,
@@ -199,6 +210,12 @@ def run(smoke: bool = False) -> common.Rows:
 
     out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")
     os.makedirs(out_dir, exist_ok=True)
+    # refuse to leave mixed-case leftovers: a stale bench_search.json (or any
+    # other case variant) would shadow the canonical artifact on
+    # case-insensitive filesystems and confuse the CI artifact glob
+    for fname in os.listdir(out_dir):
+        if fname.lower() == "bench_search.json" and fname != "BENCH_search.json":
+            os.remove(os.path.join(out_dir, fname))
     payload = {
         "machine": {
             "platform": platform.platform(),

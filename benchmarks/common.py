@@ -141,7 +141,16 @@ class Rows:
     def save(self) -> None:
         out = os.path.join(os.path.dirname(CACHE_DIR), "benchmarks")
         os.makedirs(out, exist_ok=True)
-        with open(os.path.join(out, self.bench + ".json"), "w") as f:
+        name = self.bench + ".json"
+        # bench_* modules emit a canonical machine-readable BENCH_<x>.json
+        # artifact, so their rows dump always takes the _rows suffix — on a
+        # case-insensitive filesystem <bench>.json would overwrite the
+        # artifact, and mixed-case twins confuse the CI artifact glob
+        # (bench_search.json used to shadow BENCH_search.json this way).
+        # Keyed on the name, not directory state, so save order is irrelevant.
+        if self.bench.lower().startswith("bench_"):
+            name = self.bench + "_rows.json"
+        with open(os.path.join(out, name), "w") as f:
             json.dump([{"name": n, "us": u, "derived": d} for n, u, d in self.rows], f, indent=1)
 
 

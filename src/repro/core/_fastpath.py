@@ -490,6 +490,76 @@ int32_t eval_orbit_swap(int n, int kmax, int s, const int32_t* nbr,
 """
 
 _C_SOURCE += r"""
+/* ---------------------------------------------------------------------------
+   Word-packed (bitset-frontier) batched BFS.
+
+   Bits pack the SOURCE dimension: F[v] is an sw-word bitset whose bit j is
+   set when source j's frontier currently contains vertex v (sw = ceil(nsrc /
+   64) words, so the whole frontier/visited state for an N=8192 graph with
+   1024 representative sources is ~1 MB per set).  One level advances ALL
+   sources at once with word-parallel OR/AND-NOT sweeps:
+
+       N[v]  = OR_{u in nbr(v)} F[u]        (gather over the neighbour table)
+       newF  = N & ~V;  V |= newF           (AND-NOT against visited)
+
+   which is O(n * k * sw) words per level for a k-regular graph — the n/64
+   speedup over per-source queue BFS that makes the no-kernel polish tier
+   fast, and the same sweep the numpy and JAX variants implement.  Distances
+   are exact hop counts (sentinel n for unreachable), bit-identical to every
+   other BFS in this file. */
+void bitset_bfs_rows(int n, int kmax, int nsrc, const int32_t* srcs,
+                     const int32_t* nbr, int32_t* dist,
+                     uint64_t* F, uint64_t* V, uint64_t* N)
+{
+    int sw = (nsrc + 63) >> 6;
+    size_t words = (size_t)n * sw;
+    memset(F, 0, words * sizeof(uint64_t));
+    memset(V, 0, words * sizeof(uint64_t));
+    for (size_t i = 0; i < (size_t)nsrc * n; i++) dist[i] = n;
+    for (int j = 0; j < nsrc; j++) {
+        int v = srcs[j];
+        uint64_t bit = 1ull << (j & 63);
+        F[(size_t)v * sw + (j >> 6)] |= bit;
+        V[(size_t)v * sw + (j >> 6)] |= bit;
+        dist[(size_t)j * n + v] = 0;
+    }
+    int d = 0, changed = 1;
+    while (changed) {
+        changed = 0;
+        d++;
+        for (int v = 0; v < n; v++) {
+            uint64_t* Nv = N + (size_t)v * sw;
+            for (int w = 0; w < sw; w++) Nv[w] = 0;
+            const int32_t* nb = nbr + (size_t)v * kmax;
+            for (int j = 0; j < kmax; j++) {
+                int u = nb[j];
+                if (u < 0) continue;
+                const uint64_t* Fu = F + (size_t)u * sw;
+                for (int w = 0; w < sw; w++) Nv[w] |= Fu[w];
+            }
+        }
+        for (int v = 0; v < n; v++) {
+            uint64_t* Nv = N + (size_t)v * sw;
+            uint64_t* Vv = V + (size_t)v * sw;
+            for (int w = 0; w < sw; w++) {
+                uint64_t nf = Nv[w] & ~Vv[w];
+                Nv[w] = nf;          /* N doubles as the next frontier */
+                if (!nf) continue;
+                changed = 1;
+                Vv[w] |= nf;
+                do {
+                    int b = __builtin_ctzll(nf);
+                    dist[(size_t)(w * 64 + b) * n + v] = d;
+                    nf &= nf - 1;
+                } while (nf);
+            }
+        }
+        { uint64_t* t = F; F = N; N = t; }
+    }
+}
+"""
+
+_C_SOURCE += r"""
 #include <math.h>
 
 static void rebuild_nbr_row(int n, int kmax, const unsigned char* adj, int32_t* nbr, int u)
@@ -645,6 +715,10 @@ def _compile() -> ctypes.CDLL | None:
         ctypes.c_int, ctypes.c_double,
         i32p, i64p, i32p, i32p, i32p]
     lib.eval_orbit_swap.restype = ctypes.c_int32
+    u64p = ctypes.POINTER(ctypes.c_uint64)
+    lib.bitset_bfs_rows.argtypes = [ctypes.c_int, ctypes.c_int, ctypes.c_int,
+                                    i32p, i32p, i32p, u64p, u64p, u64p]
+    lib.bitset_bfs_rows.restype = None
     u8p = ctypes.POINTER(ctypes.c_uint8)
     f64p = ctypes.POINTER(ctypes.c_double)
     lib.sa_chunk.argtypes = [ctypes.c_int, ctypes.c_int, i32p, i32p, i16p,
@@ -691,6 +765,20 @@ class FastEval:
         n, kmax = nbr.shape
         self.lib.apsp_rows(n, kmax, out.shape[0], _ptr(nbr, ctypes.c_int32),
                            _ptr(out, ctypes.c_int32), _ptr(scratch, ctypes.c_int32))
+
+    def bitset_bfs_rows(self, nbr: np.ndarray, sources: np.ndarray,
+                        dist: np.ndarray) -> None:
+        """Word-packed batched BFS from ``sources`` into ``dist`` (len(sources), n)."""
+        n, kmax = nbr.shape
+        nsrc = len(sources)
+        sw = (nsrc + 63) >> 6
+        buf = np.empty((3, n, sw), dtype=np.uint64)
+        srcs = np.ascontiguousarray(sources, dtype=np.int32)
+        self.lib.bitset_bfs_rows(n, kmax, nsrc, _ptr(srcs, ctypes.c_int32),
+                                 _ptr(nbr, ctypes.c_int32), _ptr(dist, ctypes.c_int32),
+                                 _ptr(buf[0], ctypes.c_uint64),
+                                 _ptr(buf[1], ctypes.c_uint64),
+                                 _ptr(buf[2], ctypes.c_uint64))
 
     def parent_counts(self, nbr: np.ndarray, dist: np.ndarray, npar: np.ndarray) -> None:
         n, kmax = nbr.shape

@@ -63,4 +63,11 @@ KNOWN_CIRCULANT_OFFSETS: dict[tuple[int, int], tuple[int, ...]] = {
     (4096, 4): (1, 90),              # MPL 30.1722, D 45
     (4096, 6): (1, 770, 1846),       # MPL 10.9243, D 16
     (4096, 8): (1, 652, 1651, 1911),  # MPL 7.0855, D 11
+    # N=8192/16384 polish tier (bitset-frontier engine warm starts)
+    (8192, 4): (1, 3199),              # MPL 42.6693, D 64
+    (8192, 6): (1, 480, 2187),         # MPL 13.8520, D 22
+    (8192, 8): (1, 986, 2810, 3163),   # MPL 8.5128, D 13
+    (16384, 4): (1, 4140),             # MPL 60.3496, D 91
+    (16384, 6): (1, 5060, 6967),       # MPL 17.4367, D 28
+    (16384, 8): (1, 3255, 5980, 7212),  # MPL 10.1394, D 15
 }

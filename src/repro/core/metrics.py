@@ -16,6 +16,7 @@ from .graphs import Graph
 __all__ = [
     "apsp",
     "apsp_hops",
+    "bitset_bfs_rows",
     "IncrementalAPSP",
     "SymmetricAPSP",
     "mpl",
@@ -85,6 +86,70 @@ def _bfs_rows(a32: np.ndarray, sources: np.ndarray, sentinel: int) -> np.ndarray
     return dist
 
 
+def bitset_bfs_rows(
+    nbr: np.ndarray,
+    sources: np.ndarray,
+    sentinel: int,
+    fast=None,
+) -> np.ndarray:
+    """Word-packed batched BFS: hop distances from ``sources`` as int32.
+
+    The frontier and visited sets are packed into ``uint64`` words along the
+    *source* dimension — ``F[v]`` is a ``ceil(len(sources)/64)``-word bitset
+    whose bit ``j`` says "source j's frontier contains vertex v" — so one
+    level advances every source at once with word-parallel OR/AND-NOT sweeps:
+
+        N[v]  = OR_{u in nbr(v)} F[u]      (gather over the neighbour table)
+        newF  = N & ~V;  V |= newF
+
+    For a k-regular graph this is O(n * k * len(sources) / 64) words per
+    level, replacing the dense O(n^2)-per-level matmul BFS — at N=8192 the
+    whole frontier/visited state for the 1024 representative sources is ~1 MB
+    per set.  ``fast`` is an optional ``_fastpath.FastEval`` whose C sweep
+    replaces the numpy word ops (bit-identical either way; unreachable
+    vertices hold ``sentinel``).  Works for any source count, including
+    counts not divisible by 64 (tail bits simply stay zero).
+    """
+    n = nbr.shape[0]
+    sources = np.ascontiguousarray(sources, dtype=np.int32)
+    m = len(sources)
+    dist = np.full((m, n), sentinel, dtype=np.int32)
+    if m == 0:
+        return dist
+    if fast is not None:
+        fast.bitset_bfs_rows(nbr, sources, dist)
+        if sentinel != n:  # the C sweep writes n for unreachable
+            dist[dist >= n] = sentinel
+        return dist
+    sw = (m + 63) >> 6
+    j = np.arange(m)
+    F = np.zeros((n, sw), dtype=np.uint64)
+    # sources are distinct vertices (rows of a distance matrix), so plain
+    # fancy assignment cannot collide
+    F[sources, j >> 6] = np.uint64(1) << (j & 63).astype(np.uint64)
+    V = F.copy()
+    dist[j, sources] = 0
+    valid = nbr >= 0
+    nb = np.where(valid, nbr, 0)
+    vmask = np.where(valid, ~np.uint64(0), np.uint64(0))[:, :, None]
+    d = 0
+    while True:
+        N = np.bitwise_or.reduce(F[nb] & vmask, axis=1)
+        newF = N & ~V
+        if not newF.any():
+            break
+        d += 1
+        V |= newF
+        # unpack the new-frontier bits to (n, m) bool; the explicit
+        # little-endian cast (a no-op view on LE hosts) + LSB-first unpack
+        # matches the 1 << (j & 63) packing above on any byte order
+        cols = np.unpackbits(newF.astype("<u8", copy=False).view(np.uint8),
+                             axis=1, bitorder="little")[:, :m]
+        dist[cols.T.astype(bool)] = d
+        F = newF
+    return dist
+
+
 def apsp_hops(adj: np.ndarray, sentinel: int | None = None) -> np.ndarray:
     """All-pairs hop distances from a boolean adjacency as int32.
 
@@ -121,8 +186,15 @@ def _parent_counts(adj: np.ndarray, dist: np.ndarray, nbr: np.ndarray | None = N
         nbr = _nbr_table(adj)
     valid = nbr >= 0
     nb = np.where(valid, nbr, 0)
-    return (((dist[:, nb] + np.int32(1)) == dist[:, :, None]) & valid[None, :, :]) \
-        .sum(-1, dtype=np.int16)
+    # chunk over source rows so the (rows, n, kmax) gather temp stays ~64 MB
+    # regardless of n (at N=8192 the unchunked temp is 268 MB per call)
+    out = np.empty(dist.shape, dtype=np.int16)
+    step = max(1, (1 << 24) // max(1, dist.shape[1] * nbr.shape[1]))
+    for lo in range(0, dist.shape[0], step):
+        d = dist[lo : lo + step]
+        out[lo : lo + step] = (((d[:, nb] + np.int32(1)) == d[:, :, None])
+                               & valid[None, :, :]).sum(-1, dtype=np.int16)
+    return out
 
 
 def _removal_affected(dist: np.ndarray, npar: np.ndarray, removed) -> np.ndarray:
@@ -461,10 +533,30 @@ class SymmetricAPSP:
     ``total`` is the representative-row total: the full-matrix total is
     ``fold * total``, MPL = total / (shift * (n - 1)), and the row maxima
     realise the global diameter (every row is a rotation of a representative
-    row).  A C kernel (``_fastpath.eval_orbit_swap``) accelerates both
-    phases; the numpy fallback is bit-identical (asserted by the property
-    tests).  ``n_delta`` / ``n_full`` count the two pricing paths.
+    row).  ``n_delta`` / ``n_full`` count the two pricing paths.
+
+    Three interchangeable engines price the BFS phases (all bit-identical,
+    asserted by the property tests), selected by ``engine=``:
+
+    - ``"c"`` — the ``_fastpath.eval_orbit_swap`` kernel: per-source queue
+      BFS with cascade repair, compiled at first use.  Fastest when a system
+      compiler exists.
+    - ``"bitset"`` — word-packed frontier sweeps (``bitset_bfs_rows``):
+      frontier/visited sets packed into uint64 words along the source
+      dimension, advanced by word-parallel OR/AND-NOT gathers over the
+      neighbour table.  This is the fast no-kernel path at N >= 8192 (and
+      uses the C word-packed sweep for the BFS itself when the kernel
+      happens to be available).
+    - ``"numpy"`` — the seed dense float32-matmul BFS (``_bfs_rows``); keeps
+      an (n, n) float32 adjacency mirror, O(n^2) per BFS level.
+
+    ``engine=None`` (or ``"auto"``) resolves to ``"c"`` when the kernel
+    compiles and ``"bitset"`` otherwise; ``use_c`` is the legacy knob
+    (``use_c=False`` forces ``"numpy"``, ``use_c=True`` requires ``"c"``)
+    and is overridden by an explicit ``engine=``.
     """
+
+    ENGINES = ("c", "numpy", "bitset")
 
     def __init__(
         self,
@@ -473,6 +565,7 @@ class SymmetricAPSP:
         full_rebuild_frac: float = 0.9,
         force_full: bool = False,
         use_c: bool | None = None,
+        engine: str | None = None,
     ):
         from . import _fastpath
 
@@ -488,18 +581,37 @@ class SymmetricAPSP:
         self.adj = adj if adj.dtype == np.bool_ else adj.astype(bool)
         if not np.array_equal(self.adj, np.roll(np.roll(self.adj, shift, 0), shift, 1)):
             raise ValueError(f"adjacency is not invariant under rotation by {shift}")
-        self.fast = None
-        if use_c or use_c is None:
+        # probe the C toolchain only on paths that can use it: use_c=False /
+        # engine="numpy" are explicit opt-outs and must not trigger the
+        # first-use compile attempt
+        lib = None
+        if engine in (None, "auto"):
+            if use_c is False:
+                engine = "numpy"
+            else:
+                lib = _fastpath.get_lib()
+                if lib is not None:
+                    engine = "c"
+                elif use_c:
+                    raise RuntimeError("C fast path requested but unavailable")
+                else:
+                    engine = "bitset"
+        elif engine in ("c", "bitset"):
             lib = _fastpath.get_lib()
-            if lib is not None:
-                self.fast = _fastpath.FastEval(lib)
-            elif use_c:
-                raise RuntimeError("C fast path requested but unavailable")
-        # the float32 adjacency mirror feeds only the numpy-fallback matmul
-        # BFS: with the C kernel active it would be (n, n) of dead weight
-        # (64 MB at N=4096), so it exists only on the fallback path
+        if engine not in self.ENGINES:
+            raise ValueError(f"engine={engine!r} must be one of {self.ENGINES}")
+        if engine == "c" and lib is None:
+            raise RuntimeError("C fast path requested but unavailable")
+        self.engine = engine
+        self.fast = _fastpath.FastEval(lib) if engine == "c" else None
+        # the bitset engine runs the generic numpy delta logic but swaps the
+        # BFS for the word-packed sweep (C variant of it when compiled)
+        self._bitfast = _fastpath.FastEval(lib) if engine == "bitset" and lib is not None else None
+        # the float32 adjacency mirror feeds only the dense-matmul BFS: for
+        # the other engines it would be (n, n) of dead weight (256 MB at
+        # N=8192), so it exists only on the "numpy" engine
         self.a32 = None
-        if self.fast is None:
+        if engine == "numpy":
             self.a32 = np.empty((n, n), dtype=np.float32)
             self.a32[...] = self.adj
         # zero-init required: the C kernel epoch-stamps part of this buffer
@@ -510,14 +622,44 @@ class SymmetricAPSP:
         self.npar = np.empty((shift, n), dtype=np.int16)
         if self.fast is not None:
             self.fast.apsp_rows(self.nbr, self.dist, self._scratch)
-            self.fast.parent_counts(self.nbr, self.dist, self.npar)
         else:
-            self.dist[...] = _bfs_rows(self.a32, np.arange(shift), n)
-            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
+            self.dist[...] = self._rows_bfs(np.arange(shift))
+        self._recount_parents()
         self.total = int(self.dist.sum(dtype=np.int64))
         self.diam = int(self.dist.max())
         self.n_delta = 0
         self.n_full = 0
+
+    def _recount_parents(self) -> None:
+        """Refresh ``npar`` from dist/nbr (C kernel when available — the
+        numpy gather allocates an (s, n, k) temporary, heavy at N=8192)."""
+        fast = self.fast or self._bitfast
+        if fast is not None:
+            fast.parent_counts(self.nbr, self.dist, self.npar)
+        else:
+            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
+
+    def _rows_bfs(self, sources, removed=(), added=()) -> np.ndarray:
+        """BFS rows from ``sources`` on the current graph with ``removed``
+        edges deleted and ``added`` edges inserted (state reverted on exit),
+        via the dense matmul BFS or the word-packed bitset sweep."""
+        if self.engine == "bitset":
+            touched = [x for e in (*removed, *added) for x in e]
+            self._apply_edges(removed, added)
+            if touched:
+                self._refresh_nbr_rows(touched)
+            try:
+                return bitset_bfs_rows(self.nbr, sources, self.sentinel,
+                                       fast=self._bitfast)
+            finally:
+                self._revert_edges(removed, added)
+                if touched:
+                    self._refresh_nbr_rows(touched)
+        self._apply_edges(removed, added)
+        try:
+            return _bfs_rows(self.a32, np.asarray(sources), self.sentinel)
+        finally:
+            self._revert_edges(removed, added)
 
     _build_nbr = IncrementalAPSP._build_nbr
     _refresh_nbr_rows = IncrementalAPSP._refresh_nbr_rows
@@ -588,25 +730,14 @@ class SymmetricAPSP:
         n_aff = int(aff.sum())
         if force or n_aff > self.full_rebuild_frac * s:
             self.n_full += 1
-            self._apply_edges(removed, added)
-            try:
-                new = _bfs_rows(self.a32, np.arange(s), self.sentinel)
-            finally:
-                self._revert_edges(removed, added)
+            new = self._rows_bfs(np.arange(s), removed, added)
             return self._token(removed, added, new)
 
         self.n_delta += 1
         new = self.dist.copy()
         if n_aff:
             # repair on the graph minus removed orbits (still symmetric)
-            for u, v in removed:
-                self.a32[u, v] = self.a32[v, u] = 0.0
-            try:
-                rows = _bfs_rows(self.a32, np.nonzero(aff)[0], self.sentinel)
-            finally:
-                for u, v in removed:
-                    self.a32[u, v] = self.a32[v, u] = 1.0
-            new[aff, :] = rows
+            new[aff, :] = self._rows_bfs(np.nonzero(aff)[0], removed)
         if added:
             self._insert_patch(new, added)
         return self._token(removed, added, new)
@@ -654,10 +785,7 @@ class SymmetricAPSP:
         self.total = token.total
         self.diam = token.diam
         self._refresh_nbr_rows([x for e in (*token.removed, *token.added) for x in e])
-        if self.fast is not None:
-            self.fast.parent_counts(self.nbr, self.dist, self.npar)
-        else:
-            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
+        self._recount_parents()
 
     def verify(self) -> None:
         """Assert internal state equals a from-scratch recompute AND that the

@@ -19,12 +19,15 @@ Three search tiers, matching Section 3.1 of the paper:
    edges, full recompute only as a guarded fallback.
 3. ``circulant_search`` / ``symmetric_sa_search`` — the rotational-symmetry
    restricted walks used for the large graphs (252/256/264 and now up to
-   4096 vertices): circulant offset-set hillclimb priced by an implicit
-   np.roll BFS (no graph materialisation per candidate), plus orbit-level SA
+   16384 vertices): circulant offset-set hillclimb priced by an implicit
+   np.roll BFS (no graph materialisation per candidate; a jitted JAX batch
+   sweep prices whole candidate batches at n >= 4096), plus orbit-level SA
    that can warm-start from the best circulant (``large_search``).  The
    orbit SA prices each orbit swap through ``metrics.SymmetricAPSP`` —
    batched multi-edge delta updates from only the n/fold representative
-   sources — instead of a dense BFS per proposal.
+   sources — instead of a dense BFS per proposal, with a word-packed
+   bitset-frontier BFS backend (``engine="bitset"``) replacing the dense
+   matmul fallback at N >= 8192.
 
 Every function takes an explicit ``seed`` and is bit-reproducible (the
 optional C kernel and the pure-python fallback consume identical pre-drawn
@@ -38,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+from collections.abc import Iterable
 
 import numpy as np
 
@@ -364,8 +368,17 @@ def sa_search(
     its own PRNG stream (``[seed, r]``); every ``exchange_every`` iterations
     the globally best state replaces the worst chain.  Replica 0 is never
     overwritten, so its trajectory is bit-identical to a ``replicas=1`` run
-    with the same seed — best-of-R can only improve on it.  Swap pricing is
-    ``metrics.IncrementalAPSP`` delta evaluation (C kernel when available).
+    with the same seed — best-of-R can only improve on it.
+
+    Engine selection: swap pricing is ``metrics.IncrementalAPSP`` delta
+    evaluation.  The C ``sa_chunk`` kernel runs the whole annealing inner
+    loop when a system compiler exists; otherwise the pure-python mirror
+    consumes the identical pre-drawn random streams, so both paths follow
+    the same trajectory per seed (``REPRO_NO_C_KERNEL=1`` forces the
+    fallback).  This tier keeps the dense (n, n) distance state — the
+    word-packed bitset engine applies to the symmetry-restricted tiers
+    (``symmetric_sa_search``/``large_search``), whose row-restricted state
+    is what scales to N >= 8192.
     """
     ring_mask = ring(n).adjacency()
     gamma = math.exp(math.log(t_end / t_start) / n_iter) if n_iter else 1.0
@@ -516,12 +529,121 @@ def _circulant_profile(n: int, offsets) -> tuple[float, float]:
     return total / (n - 1), float(d)
 
 
+# --- JAX batched circulant pricing -------------------------------------------
+# The same packed frontier sweep as ``_circulant_profile``, jitted and
+# batched over candidate offset sets (each candidate's frontier is one row;
+# the while_loop advances every candidate's BFS level in lock step).  Exact
+# integer hop counts, so the values — and therefore the hillclimb trajectory
+# — are identical to the numpy path.
+
+_JAX_SWEEP_CACHE: dict = {}
+_JAX_CHUNK = 32  # candidates per jitted call (padded, so shapes stay static)
+
+
+def _jax_modules():
+    """(jax, jax.numpy) or (None, None); cached so the numpy path pays the
+    import probe once."""
+    if "modules" not in _JAX_SWEEP_CACHE:
+        try:
+            import jax
+            import jax.numpy as jnp
+
+            _JAX_SWEEP_CACHE["modules"] = (jax, jnp)
+        except Exception:  # pragma: no cover - jax always present in CI
+            _JAX_SWEEP_CACHE["modules"] = (None, None)
+    return _JAX_SWEEP_CACHE["modules"]
+
+
+def _jax_sweep(n: int, m: int):
+    """Jitted batched frontier sweep for (chunk, m) shift arrays on C_n.
+
+    Returns a function shifts -> (total_hops, diameter, connected) per
+    candidate row.  Shift lists may contain duplicates (padding) — OR-ing a
+    frontier with itself is a no-op, so the counts stay exact.
+    """
+    key = (n, m)
+    fn = _JAX_SWEEP_CACHE.get(key)
+    if fn is not None:
+        return fn
+    jax, jnp = _jax_modules()
+
+    def sweep(shifts):
+        b = shifts.shape[0]
+        idx = (jnp.arange(n)[None, None, :] - shifts[:, :, None]) % n  # (b, m, n)
+        reach0 = jnp.zeros((b, n), bool).at[:, 0].set(True)
+        zeros = jnp.zeros((b,), jnp.int32)
+
+        def body(st):
+            d, total, diam, reach, frontier = st
+            nxt = jnp.zeros_like(frontier)
+            for i in range(m):  # static unroll: m <= 2k shifts
+                nxt = nxt | jnp.take_along_axis(frontier, idx[:, i, :], axis=1)
+            newf = nxt & ~reach
+            cnt = newf.sum(1, dtype=jnp.int32)
+            d = d + 1
+            return (d, total + d * cnt, jnp.where(cnt > 0, d, diam),
+                    reach | newf, newf)
+
+        st = (jnp.int32(0), zeros, zeros, reach0, reach0)
+        _, total, diam, reach, _ = jax.lax.while_loop(
+            lambda st: st[4].any(), body, st)
+        return total, diam, reach.all(1)
+
+    fn = jax.jit(sweep)
+    _JAX_SWEEP_CACHE[key] = fn
+    return fn
+
+
+def _profile_batch(n: int, offset_lists, engine: str) -> "Iterable[tuple[float, float]]":
+    """(MPL, diameter) for a batch of full offset lists (all the same length).
+
+    ``engine="numpy"`` prices each list with ``_circulant_profile`` —
+    lazily, so a caller that stops consuming after an acceptance pays
+    exactly the sequential cost; ``engine="jax"`` packs the batch into
+    padded ``_JAX_CHUNK``-row chunks and prices each chunk in one jitted
+    sweep.  Values are bit-identical.
+    """
+    if engine != "jax" or _jax_modules()[0] is None:
+        return (_circulant_profile(n, offs) for offs in offset_lists)
+    if not offset_lists:
+        return iter(())
+    shifts = []
+    for offs in offset_lists:
+        ss = sorted({s % n for s in offs} - {0})
+        shifts.append(sorted({sh for s in ss for sh in (s, n - s)}))
+    m = max(len(s) for s in shifts)
+    arr = np.empty((len(shifts), m), dtype=np.int32)
+    for i, s in enumerate(shifts):
+        arr[i] = np.resize(s, m)  # cyclic pad: duplicate shifts are no-ops
+    sweep = _jax_sweep(n, m)
+
+    def chunks():
+        # lazy per-chunk pricing: a caller that stops consuming after an
+        # acceptance never pays for the unexamined chunks (mirrors the
+        # numpy generator)
+        for lo in range(0, len(shifts), _JAX_CHUNK):
+            chunk = arr[lo : lo + _JAX_CHUNK]
+            real = len(chunk)
+            if real < _JAX_CHUNK:
+                chunk = np.concatenate(
+                    [chunk, np.repeat(chunk[:1], _JAX_CHUNK - real, axis=0)])
+            total, diam, conn = (np.asarray(x) for x in sweep(chunk))
+            for i in range(real):
+                if conn[i]:
+                    yield (int(total[i]) / (n - 1), float(diam[i]))
+                else:
+                    yield (float("inf"), float("inf"))
+
+    return chunks()
+
+
 def circulant_search(
     n: int,
     k: int,
     seed: int = 0,
     n_iter: int = 300,
     include_ring: bool = True,
+    engine: str = "auto",
 ) -> SearchResult:
     """Random-restart hillclimb over circulant offset sets.
 
@@ -530,7 +652,23 @@ def circulant_search(
     Candidates are priced by ``_circulant_profile`` (implicit BFS on the
     offset list, no graph construction), so 512/1024-vertex searches finish
     in seconds.
+
+    ``engine`` selects the candidate pricer: ``"numpy"`` prices candidates
+    one at a time; ``"jax"`` batches each position sweep through a jitted
+    packed frontier sweep (``_jax_sweep``) — the accelerator path for
+    N >= 8192 offset batches.  ``"auto"`` picks ``"jax"`` when jax imports
+    and n >= 4096, ``"numpy"`` otherwise.  The pricers return identical
+    values and candidates are accepted in the same order, so the trajectory
+    (and the result) is bit-identical across engines at a given seed.
     """
+    if engine == "auto":
+        engine = "jax" if n >= 4096 and _jax_modules()[0] is not None else "numpy"
+    if engine not in ("numpy", "jax"):
+        raise ValueError(f"engine={engine!r} must be 'auto', 'numpy' or 'jax'")
+    if engine == "jax" and _jax_modules()[0] is None:
+        # an explicitly requested backend must fail loudly, not degrade to
+        # the sequential pricer (matches the engine="c" convention)
+        raise RuntimeError("jax engine requested but jax is unavailable")
     rng = np.random.default_rng(seed)
     half = k // 2
     has_anti = k % 2 == 1  # odd degree needs the antipodal offset n/2
@@ -570,15 +708,42 @@ def circulant_search(
                 # random subsample (the paper's large-space regime)
                 cands = pool if len(pool) * len(offs) <= n_iter else \
                     rng.permutation(pool)[: min(32, len(pool))]
-                for cand in cands:
-                    it += 1
-                    if cand in offs:
-                        continue
-                    trial = sorted(offs[:pos] + [int(cand)] + offs[pos + 1 :])
-                    val = mpl_of(trial)
-                    if val < cur:
-                        offs, cur = trial, val
-                        improved = True
+                cands = [int(c) for c in cands]
+                # price the unexamined tail against the current offsets in
+                # one batch; an acceptance mid-sweep restarts the tail
+                # against the new base — exactly the sequential semantics,
+                # so numpy and jax pricing follow the same trajectory
+                i = 0
+                while i < len(cands):
+                    tail = cands[i:]
+                    # one eligibility pass drives both the batch and its
+                    # consumption, so the vals iterator cannot desync:
+                    # trials[j] is None for skipped candidates (already in
+                    # offs, or duplicate full offsets — inf, never accepted)
+                    trials = []
+                    for c in tail:
+                        t = None if c in offs else \
+                            sorted(offs[:pos] + [c] + offs[pos + 1 :])
+                        if t is not None:
+                            fo = full_offsets(t)
+                            if len(set(fo)) != len(fo):
+                                t = None
+                        trials.append(t)
+                    vals = iter(_profile_batch(
+                        n, [full_offsets(t) for t in trials if t is not None],
+                        engine))
+                    adv = len(tail)
+                    for j, trial in enumerate(trials):
+                        it += 1
+                        if trial is None:
+                            continue
+                        val = next(vals)
+                        if val < cur:
+                            offs, cur = trial, val
+                            improved = True
+                            adv = j + 1
+                            break
+                    i += adv
             if cur < best:
                 best, best_offs = cur, list(offs)
                 history.append(best[0])
@@ -681,7 +846,9 @@ def symmetric_sa_search(
     t_end: float = 1e-4,
     target_mpl: float | None = None,
     start_orbits: set[frozenset[tuple[int, int]]] | None = None,
+    start_offsets: tuple[int, ...] | None = None,
     incremental: bool = True,
+    engine: str | None = None,
 ) -> SearchResult:
     """SA over *orbit-level* edge swaps of graphs with ``fold``-fold
     rotational symmetry (paper: 'random iteration of Hamiltonian graphs with
@@ -689,19 +856,34 @@ def symmetric_sa_search(
 
     The graph stays invariant under rotation by s = n/fold throughout, so the
     search space shrinks by ~fold× and every accepted design is symmetric —
-    the paper's engineering-feasibility requirement.  ``start_orbits`` (e.g.
-    from ``_circulant_orbits`` of a good circulant) warm-starts the walk.
+    the paper's engineering-feasibility requirement.  ``start_offsets`` (a
+    circulant offset list, e.g. from ``known_optimal.KNOWN_CIRCULANT_OFFSETS``)
+    warm-starts the walk from that circulant's chord orbits; ``start_orbits``
+    passes an explicit orbit set instead (mutually exclusive).
 
     With ``incremental=True`` (the default) proposals are priced by
     ``metrics.SymmetricAPSP`` — distances delta-updated from only the
     ``n/fold`` representative sources, batched over the whole orbit swap —
-    which is what makes the N=2048/4096 polish tier run in seconds.
+    which is what makes the N >= 2048 polish tier run in seconds.
     ``incremental=False`` keeps the seed dense-BFS pricing
     (``_mpl_fast`` from ``s`` sources per proposal); both paths consume the
     PRNG identically and the evaluator is exact, so the two trajectories are
     bit-identical per seed (asserted in tests and measured by the
     ``polish_*`` rows of ``benchmarks/bench_search.py``).
+
+    ``engine`` picks the ``SymmetricAPSP`` backend (only meaningful with
+    ``incremental=True``): ``"c"`` queue-BFS kernel, ``"bitset"``
+    word-packed frontier sweeps (the fast no-compiler path, sized for
+    N >= 8192), ``"numpy"`` dense matmul BFS, or ``None``/``"auto"`` — C
+    kernel when it compiles, bitset otherwise.  All engines are
+    bit-identical, so ``engine`` never changes the result — only the wall
+    time (see docs/ARCHITECTURE.md for the selection matrix).
     """
+    if engine not in (None, "auto", *metrics.SymmetricAPSP.ENGINES):
+        # validate even when incremental=False (where engine is unused), so
+        # a typo'd engine= never silently runs the dense pricer
+        raise ValueError(
+            f"engine={engine!r} must be one of {metrics.SymmetricAPSP.ENGINES} or 'auto'")
     fold_i = int(fold)
     if fold_i != fold or fold_i < 1 or n % fold_i:
         raise ValueError(
@@ -709,6 +891,10 @@ def symmetric_sa_search(
             "non-divisor fold would make the rotation orbits irregular")
     fold = fold_i
     s = n // fold
+    if start_offsets is not None:
+        if start_orbits is not None:
+            raise ValueError("pass either start_orbits or start_offsets, not both")
+        start_orbits = _circulant_orbits(n, s, start_offsets)
     rng = np.random.default_rng(seed)
     orbits = set(start_orbits) if start_orbits is not None else \
         _symmetric_random_start(n, k, s, rng)
@@ -727,7 +913,7 @@ def symmetric_sa_search(
 
     gamma = math.exp(math.log(t_end / t_start) / n_iter)
     adj = adj_of(orbits)
-    ev = metrics.SymmetricAPSP(adj, shift=s) if incremental else None
+    ev = metrics.SymmetricAPSP(adj, shift=s, engine=engine) if incremental else None
     if ev is not None:
         cur_mpl, cur_d = ev.mpl(), ev.diameter()
     else:
@@ -831,6 +1017,7 @@ def large_search(
     budget: int | None = None,
     fold: int = 4,
     polish: bool = True,
+    engine: str | None = None,
 ) -> SearchResult:
     """Large-N tier: fast circulant hillclimb, then orbit-level SA polish
     warm-started from the best circulant (when ``fold`` divides ``n``).
@@ -840,9 +1027,28 @@ def large_search(
     the hillclimb entirely (seed 0 reproduces the pinning run).  The polish
     stage prices orbit swaps through ``metrics.SymmetricAPSP`` (delta updates
     from the n/fold representative sources), which keeps it practical up to
-    N=4096 — pinned offsets exist for 2048/4096 at degrees 4/6/8.
+    N=16384 — pinned offsets exist for 2048..16384 at degrees 4/6/8.
+
+    ``engine`` is forwarded to ``symmetric_sa_search`` (and through it to
+    ``metrics.SymmetricAPSP``): ``None``/``"auto"`` resolves to the C queue
+    BFS kernel when one compiles and to the word-packed ``"bitset"`` sweep
+    otherwise; every engine is bit-identical, so the choice affects wall
+    time only.  The hillclimb stage independently auto-selects its candidate
+    pricer (``circulant_search``'s jax batch sweep at n >= 4096).
     """
     from .known_optimal import KNOWN_CIRCULANT_OFFSETS
+
+    # surface engine problems here: the polish try-block below is defensive
+    # against walk failures and would silently swallow a typo'd engine= or a
+    # C request on a compiler-less box, returning the unpolished circulant
+    if engine not in (None, "auto", *metrics.SymmetricAPSP.ENGINES):
+        raise ValueError(
+            f"engine={engine!r} must be one of {metrics.SymmetricAPSP.ENGINES} or 'auto'")
+    if engine == "c":
+        from . import _fastpath
+
+        if _fastpath.get_lib() is None:
+            raise RuntimeError("C fast path requested but unavailable")
 
     pinned = KNOWN_CIRCULANT_OFFSETS.get((n, k)) if seed == 0 else None
     if pinned is not None:
@@ -861,7 +1067,7 @@ def large_search(
         orbits = _circulant_orbits(n, n // fold, res_c.offsets)
         res_s = symmetric_sa_search(
             n, k, seed=seed, n_iter=max(200, (budget or 400) * 2),
-            fold=fold, start_orbits=orbits)
+            fold=fold, start_orbits=orbits, engine=engine)
     except (RuntimeError, ValueError):  # pragma: no cover - defensive
         return res_c
     return res_s if (res_s.mpl, res_s.diameter) < (res_c.mpl, res_c.diameter) else res_c

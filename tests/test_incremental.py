@@ -274,6 +274,103 @@ def test_batched_multiedge_matches_full_recompute(n, swap_seed):
             ev.verify()
 
 
+# ------------------------------------------------------------------------------
+# Word-packed (bitset-frontier) BFS backend
+# ------------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 90), st.sampled_from([3, 4, 5, 6]), st.integers(0, 10_000))
+def test_bitset_rows_match_dense_bfs(n, k, seed):
+    """Word-packed BFS distances exactly equal dense BFS on random regular
+    graphs — including source counts not divisible by 64 and source subsets."""
+    if n * k % 2 or n <= k:
+        n, k = 23, 4  # deliberately not divisible by 64
+    try:
+        g = random_hamiltonian_regular(n, k, seed=seed)
+    except RuntimeError:
+        return
+    adj = g.adjacency()
+    nbr = metrics._nbr_table(adj)
+    ref = metrics.apsp_hops(adj)
+    assert np.array_equal(metrics.bitset_bfs_rows(nbr, np.arange(n), n), ref)
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, n))
+    srcs = rng.choice(n, size=m, replace=False)
+    assert np.array_equal(metrics.bitset_bfs_rows(nbr, srcs, n), ref[srcs])
+
+
+def test_bitset_rows_disconnected_and_sentinel():
+    """Disconnected components hold the sentinel, for any sentinel value."""
+    edges = [(i, (i + 1) % 5) for i in range(5)] + \
+            [(5 + i, 5 + (i + 1) % 5) for i in range(5)]
+    adj = from_edges(10, edges).adjacency()
+    nbr = metrics._nbr_table(adj)
+    ref = metrics.apsp_hops(adj, sentinel=99)
+    got = metrics.bitset_bfs_rows(nbr, np.arange(10), 99)
+    assert np.array_equal(got, ref)
+    assert (got == 99).sum() == 50  # 2 components of 5: half the pairs
+
+
+def test_bitset_c_and_numpy_sweeps_identical():
+    """The C word-packed sweep and the numpy word ops are bit-identical."""
+    from repro.core import _fastpath
+
+    lib = _fastpath.get_lib()
+    if lib is None:
+        pytest.skip("no C compiler in this environment")
+    fast = _fastpath.FastEval(lib)
+    for n, offs in [(100, [1, 7]), (130, [2, 9, 31]), (64, [1, 5])]:
+        adj = circulant(n, offs).adjacency()
+        nbr = metrics._nbr_table(adj)
+        ref = metrics.bitset_bfs_rows(nbr, np.arange(n), n)
+        assert np.array_equal(metrics.bitset_bfs_rows(nbr, np.arange(n), n,
+                                                      fast=fast), ref)
+        srcs = np.array([0, 3, n - 1])
+        assert np.array_equal(metrics.bitset_bfs_rows(nbr, srcs, n, fast=fast),
+                              ref[srcs])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([(12, 3), (16, 4), (24, 4), (24, 6)]),
+       st.integers(0, 10_000))
+def test_orbit_bitset_engine_matches_other_engines(shape, swap_seed):
+    """SymmetricAPSP engine='bitset' prices orbit swaps bit-identically to
+    the dense-numpy engine (and the C engine when available), with identical
+    delta/full counters, through commits and disconnections alike."""
+    s, fold = shape
+    n = s * fold
+    rng = np.random.default_rng(swap_seed)
+    offs = [1] + sorted(rng.choice(range(2, n // 2), size=2, replace=False).tolist())
+    adj = circulant(n, offs).adjacency()
+    from repro.core import _fastpath
+
+    engines = ["numpy", "bitset"] + (["c"] if _fastpath.get_lib() is not None else [])
+    evs = {e: metrics.SymmetricAPSP(adj.copy(), shift=s, engine=e) for e in engines}
+    for _ in range(6):
+        swap = _random_orbit_swap(evs["numpy"], rng)
+        if swap is None:
+            continue
+        toks = {e: ev.evaluate_swap(*swap) for e, ev in evs.items()}
+        ref = toks["numpy"]
+        for e, tok in toks.items():
+            assert np.array_equal(tok.dist, ref.dist), e
+            assert tok.total == ref.total and tok.diam == ref.diam, e
+            assert tok.mpl == ref.mpl, e
+        if rng.random() < 0.6:
+            for e, ev in evs.items():
+                ev.commit(toks[e])
+                ev.verify()
+    assert len({(ev.n_delta, ev.n_full) for ev in evs.values()}) == 1
+
+
+def test_symmetric_engine_validation():
+    adj = circulant(24, [1, 5]).adjacency()
+    with pytest.raises(ValueError, match="engine"):
+        metrics.SymmetricAPSP(adj, shift=6, engine="bogus")
+    ev = metrics.SymmetricAPSP(adj, shift=6, engine="bitset")
+    assert ev.engine == "bitset" and ev.fast is None and ev.a32 is None
+
+
 def test_symmetric_evaluator_rejects_asymmetric_input():
     adj = circulant(24, [1, 5]).adjacency()
     adj[0, 9] = adj[9, 0] = True  # break the rotational symmetry

@@ -157,6 +157,68 @@ def test_symmetric_sa_engine_matches_dense_trajectory():
         assert a.evals_delta + a.evals_full > 0  # engine actually priced
 
 
+def test_symmetric_sa_bitset_engine_matches_dense_trajectory():
+    """Acceptance gate: engine='bitset' produces bit-identical MPL
+    trajectories (and graphs) to the dense path at the same seed."""
+    for n, k, fold, seed in [(48, 4, 4, 0), (64, 6, 4, 3)]:
+        a = search.symmetric_sa_search(n, k, seed=seed, n_iter=300, fold=fold,
+                                       engine="bitset")
+        b = search.symmetric_sa_search(n, k, seed=seed, n_iter=300, fold=fold,
+                                       incremental=False)
+        assert a.graph.edges == b.graph.edges
+        assert a.mpl == b.mpl and a.diameter == b.diameter
+        assert a.accepted == b.accepted and a.history == b.history
+        assert a.evals_delta + a.evals_full > 0
+
+
+def test_symmetric_sa_engine_validation():
+    with pytest.raises(ValueError, match="engine"):
+        search.symmetric_sa_search(16, 4, seed=0, n_iter=10, fold=4,
+                                   engine="bogus")
+
+
+def test_circulant_jax_engine_matches_numpy_trajectory():
+    """The jitted JAX batch pricer follows the numpy hillclimb trajectory
+    exactly (same accepted offsets, same iteration count, same history)."""
+    pytest.importorskip("jax")
+    a = search.circulant_search(64, 4, seed=0, n_iter=120, engine="numpy")
+    b = search.circulant_search(64, 4, seed=0, n_iter=120, engine="jax")
+    assert a.offsets == b.offsets
+    assert a.mpl == b.mpl and a.diameter == b.diameter
+    assert a.iterations == b.iterations and a.history == b.history
+
+
+def test_circulant_engine_validation():
+    with pytest.raises(ValueError, match="engine"):
+        search.circulant_search(64, 4, seed=0, n_iter=10, engine="bogus")
+
+
+def test_circulant_jax_engine_handles_empty_candidate_batch():
+    """Position sweeps where every candidate is ineligible must not crash
+    the batched pricer (regression: max() over an empty shift list)."""
+    pytest.importorskip("jax")
+    a = search.circulant_search(6, 4, seed=0, n_iter=20, engine="numpy")
+    b = search.circulant_search(6, 4, seed=0, n_iter=20, engine="jax")
+    assert a.mpl == b.mpl and a.offsets == b.offsets
+
+
+def test_symmetric_sa_start_offsets_public_knob():
+    """start_offsets= (the public warm-start API) is equivalent to passing
+    the circulant's chord orbits explicitly, and excludes start_orbits."""
+    from repro.core.search import _circulant_orbits
+
+    n, k, fold = 64, 6, 4
+    offs = (1, 9, 23)
+    a = search.symmetric_sa_search(n, k, seed=0, n_iter=100, fold=fold,
+                                   start_offsets=offs)
+    b = search.symmetric_sa_search(n, k, seed=0, n_iter=100, fold=fold,
+                                   start_orbits=_circulant_orbits(n, n // fold, offs))
+    assert a.graph.edges == b.graph.edges and a.mpl == b.mpl
+    with pytest.raises(ValueError, match="either"):
+        search.symmetric_sa_search(n, k, seed=0, n_iter=5, fold=fold,
+                                   start_offsets=offs, start_orbits=set())
+
+
 def test_symmetric_sa_engine_uses_delta_evaluation_at_scale():
     """At large N the orbit engine must carry the load on the delta path."""
     from repro.core.known_optimal import KNOWN_CIRCULANT_OFFSETS
@@ -186,6 +248,24 @@ def test_large_search_4096_pinned_polish_fast():
     assert dt < 120
     assert res.graph.n == 4096 and res.graph.degree() == 8
     assert res.mpl <= 7.0855 + 1e-9  # the pinned circulant MPL
+
+
+@pytest.mark.slow
+def test_symmetric_sa_8192_bitset_polish():
+    """The bitset-engine polish tier reaches N=8192 from the pinned circulant
+    warm start, prices on the delta path, and never degrades below it."""
+    from repro.core.known_optimal import KNOWN_CIRCULANT_OFFSETS
+    from repro.core.search import _circulant_profile
+
+    n, k, fold = 8192, 8, 8
+    assert (n, k) in KNOWN_CIRCULANT_OFFSETS
+    offs = KNOWN_CIRCULANT_OFFSETS[(n, k)]
+    warm_mpl, _ = _circulant_profile(n, offs)
+    res = search.symmetric_sa_search(n, k, seed=0, n_iter=25, fold=fold,
+                                     start_offsets=offs, engine="bitset")
+    assert res.graph.n == n and res.graph.degree() == k
+    assert res.mpl <= warm_mpl + 1e-9
+    assert res.evals_delta > 0
 
 
 def test_known_optimal_targets_table():

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Docs link-checker: keep docs/*.md and README.md from rotting.
+
+Three checks, run by the CI ``docs`` job (and locally via
+``PYTHONPATH=src python tools/check_docs.py``):
+
+1. **Relative links** ``[text](path)`` must point at files that exist
+   (resolved against the markdown file's directory).  External URLs and
+   GitHub-web-relative links that escape the repo root (e.g. the CI badge's
+   ``../../actions/...``) are skipped.
+2. **Anchors** ``[text](#heading)`` / ``[text](file.md#heading)`` must
+   match a heading in the target file (GitHub slug rules: lowercase,
+   punctuation stripped, spaces to hyphens).
+3. **Module paths**: every backticked dotted path starting with ``repro.``
+   or ``benchmarks.`` must import (the trailing component may be an
+   attribute of the module), so the architecture tables can never name an
+   entry point that no longer exists.
+
+Exit code 0 when everything resolves; prints each failure otherwise.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+MODPATH_RE = re.compile(r"`((?:repro|benchmarks)(?:\.\w+)+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    return {github_slug(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def check_links(path: pathlib.Path, errors: list[str]) -> None:
+    text = path.read_text()
+    for target in LINK_RE.findall(text):
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        dest, _, anchor = target.partition("#")
+        base = path if not dest else (path.parent / dest).resolve()
+        if dest:
+            try:
+                base.relative_to(ROOT)
+            except ValueError:
+                continue  # GitHub-web-relative (../../actions/...): not a file
+            if not base.exists():
+                errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+                continue
+        if anchor and base.suffix == ".md":
+            if anchor not in anchors_of(base):
+                errors.append(f"{path.relative_to(ROOT)}: missing anchor -> {target}")
+
+
+def check_module_paths(path: pathlib.Path, errors: list[str]) -> None:
+    for dotted in sorted(set(MODPATH_RE.findall(path.read_text()))):
+        try:
+            importlib.import_module(dotted)
+            continue
+        except ImportError:
+            pass
+        mod_name, _, attr = dotted.rpartition(".")
+        try:
+            mod = importlib.import_module(mod_name)
+        except ImportError as e:
+            errors.append(f"{path.relative_to(ROOT)}: module does not import -> "
+                          f"`{dotted}` ({e})")
+            continue
+        if not hasattr(mod, attr):
+            errors.append(f"{path.relative_to(ROOT)}: `{mod_name}` has no "
+                          f"attribute `{attr}`")
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT))          # benchmarks.*
+    sys.path.insert(0, str(ROOT / "src"))  # repro.*
+    errors: list[str] = []
+    for path in DOC_FILES:
+        check_links(path, errors)
+        check_module_paths(path, errors)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"check_docs: {len(DOC_FILES)} files OK "
+          f"(links, anchors, module paths all resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
