@@ -21,8 +21,10 @@ tier.  Emits the usual CSV rows AND a machine-readable
 seed; the two trajectories are bit-identical, so ``engine_mpl == mpl`` and
 ``speedup`` isolates the evaluator.  The N >= 8192 rows pin
 ``engine="bitset"`` (the word-packed frontier sweep) and record the engine in
-the row's ``engine`` field.  The full schema reference lives in
-docs/BENCHMARKS.md.
+the row's ``engine`` field; a companion ``polish_n8192_k8_pallas`` row prices
+the same trajectory through the Pallas device sweep (``engine="pallas"``,
+interpret mode on CPU runners) against the bitset baseline.  The full schema
+reference lives in docs/BENCHMARKS.md.
 """
 import json
 import math
@@ -206,6 +208,44 @@ def run(smoke: bool = False) -> common.Rows:
             "mpl_lb": lb,
             "gap_pct": round((res.mpl / lb - 1) * 100, 2),
             "evals_delta": res.evals_delta, "evals_full": res.evals_full,
+        })
+
+    # --- pallas device sweep vs the host bitset sweep at N=8192 --------------
+    # Both engines price the identical per-seed trajectory (the registry
+    # contract), so the row isolates the backend: the Pallas kernel runs the
+    # packed frontier sweep in VMEM with 32-bit words.  On CPU-only runners
+    # the kernel executes in interpret mode (recorded in the row), so the
+    # row tracks parity and trajectory equality there; the speedup column
+    # only means device performance on real TPU/GPU runners.
+    for (n, k, fold, iters) in ([(8192, 8, 16, 4)] if smoke else [(8192, 8, 8, 6)]):
+        lb = metrics.mpl_lower_bound(n, k)
+        offs = KNOWN_CIRCULANT_OFFSETS[(n, k)]
+        orbits = search._circulant_orbits(n, n // fold, offs)
+        t0 = time.perf_counter()
+        res_p = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
+                                           start_orbits=orbits, engine="pallas")
+        pallas_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res_b = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
+                                           start_orbits=orbits, engine="bitset")
+        bitset_s = time.perf_counter() - t0
+        assert res_p.mpl == res_b.mpl, "engine trajectories diverged"
+        speedup = bitset_s / pallas_s if pallas_s > 0 else float("inf")
+        from repro.core.engines import pallas_sweep
+        interp = pallas_sweep.get_interpret()
+        rows.add(f"polish_n{n}_k{k}_pallas", pallas_s,
+                 f"{iters} orbit iters fold={fold} pallas={pallas_s:.3f}s "
+                 f"(interpret={interp}) bitset={bitset_s:.3f}s "
+                 f"speedup={speedup:.2f}x mpl={res_p.mpl:.4f} lb={lb:.4f}")
+        results.append({
+            "name": f"polish_n{n}_k{k}_pallas", "n": n, "k": k, "fold": fold,
+            "iters": iters, "engine": "pallas", "baseline": "bitset",
+            "interpret": interp,
+            "engine_s": round(pallas_s, 4), "seed_s": round(bitset_s, 4),
+            "speedup": round(speedup, 2),
+            "engine_mpl": res_p.mpl, "mpl": res_b.mpl, "mpl_lb": lb,
+            "gap_pct": round((res_p.mpl / lb - 1) * 100, 2),
+            "evals_delta": res_p.evals_delta, "evals_full": res_p.evals_full,
         })
 
     out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")

@@ -9,6 +9,11 @@ exposes it via ctypes.  Everything degrades gracefully: if no compiler is
 available (or ``REPRO_FASTPATH=0`` is set) callers fall back to the pure
 numpy implementation in ``metrics.py`` — results are bit-identical either
 way (asserted by the property tests).
+
+This module only provides the compiled primitives (``get_lib`` /
+``FastEval``); engine *selection* — name validation, availability probing,
+auto-resolution — lives in the ``core.engines`` registry, whose ``c`` and
+``bitset`` adapters wrap these entry points.
 """
 from __future__ import annotations
 

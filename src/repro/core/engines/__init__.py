@@ -1,0 +1,147 @@
+"""Pluggable APSP engine subsystem — the single place engine names are
+validated and resolved.
+
+Every search tier prices proposals through an interchangeable *engine*; this
+package holds the :class:`~repro.core.engines.base.Engine` protocol, one
+adapter per backend, and the registry that maps names to singletons:
+
+======== =============================================== ====================
+name     substrate                                       adapter
+======== =============================================== ====================
+c        ``_fastpath`` queue-BFS / orbit-delta C kernel  ``c_kernel``
+numpy    dense float32-matmul BFS (the seed path)        ``numpy_dense``
+bitset   word-packed uint64 host frontier sweep          ``bitset``
+pallas   word-packed uint32 VMEM sweep (device kernel)   ``pallas_sweep``
+jax      jitted batched circulant pricer                 ``jax_circulant``
+======== =============================================== ====================
+
+The first four are *row engines* (``ROWS_ENGINES``): drop-in backends for
+the incremental evaluators' BFS-rows/parent-counts primitives, resolved by
+:func:`resolve_rows`.  ``jax``/``numpy`` double as *circulant engines*
+(``CIRCULANT_ENGINES``): candidate-batch pricers for ``circulant_search``,
+resolved by :func:`resolve_circulant`.  All engines are bit-identical per
+seed by contract — the property tests assert it — so resolution only ever
+moves wall time.
+
+Auto-resolution (``engine=None``/``"auto"``) honours:
+
+- ``REPRO_NO_C_KERNEL=1`` / ``REPRO_FASTPATH=0`` — disables the C probe
+  (inside ``_fastpath.get_lib``), so auto degrades to ``bitset``;
+- ``REPRO_ENGINE=<name>`` — forces the named row engine (the CI
+  engine-matrix job runs the suite once per engine this way);
+- the legacy ``use_c`` knob (``use_c=False`` → ``numpy`` without touching
+  the compiler probe, ``use_c=True`` → ``c`` or RuntimeError), overridden
+  by an explicit ``engine=``.
+"""
+from __future__ import annotations
+
+import os
+
+from .base import Engine
+from .bitset import BitsetEngine
+from .c_kernel import CKernelEngine
+from .numpy_dense import NumpyDenseEngine
+from .pallas_sweep import PallasEngine
+from . import jax_circulant, pallas_sweep
+
+__all__ = [
+    "Engine",
+    "ROWS_ENGINES",
+    "CIRCULANT_ENGINES",
+    "register",
+    "get_engine",
+    "resolve_rows",
+    "resolve_circulant",
+    "check_engine",
+    "available_engines",
+]
+
+_REGISTRY: dict[str, Engine] = {}
+
+#: registered row-engine names, in registration order — extended live by
+#: :func:`register`, so out-of-tree engines resolve like the built-ins
+ROWS_ENGINES: tuple[str, ...] = ()
+CIRCULANT_ENGINES = ("numpy", "jax")
+
+
+def register(engine: Engine) -> Engine:
+    """Add an engine singleton to the registry (last registration wins);
+    the name becomes resolvable through ``get_engine``/``resolve_rows``."""
+    global ROWS_ENGINES
+    _REGISTRY[engine.name] = engine
+    if engine.name not in ROWS_ENGINES:
+        ROWS_ENGINES = ROWS_ENGINES + (engine.name,)
+    return engine
+
+
+register(CKernelEngine())
+register(NumpyDenseEngine())
+register(BitsetEngine())
+register(PallasEngine())
+
+
+def available_engines() -> tuple[str, ...]:
+    """Row-engine names whose availability probe passes right now."""
+    return tuple(n for n in ROWS_ENGINES if _REGISTRY[n].available())
+
+
+def get_engine(name: str) -> Engine:
+    """Validated registry lookup: ValueError for unknown names, RuntimeError
+    when the engine exists but its availability probe fails."""
+    eng = _REGISTRY.get(name)
+    if eng is None:
+        raise ValueError(
+            f"engine={name!r} must be one of {ROWS_ENGINES} or 'auto'")
+    if not eng.available():
+        raise RuntimeError(eng.why_unavailable())
+    return eng
+
+
+def resolve_rows(engine: str | None = None, use_c: bool | None = None) -> Engine:
+    """Resolve an ``engine=`` argument for the row evaluators.
+
+    Explicit names win over ``use_c``; ``None``/``"auto"`` resolves to the
+    ``REPRO_ENGINE`` override when set (and ``use_c`` is unset), else to the
+    C kernel when it compiles and the bitset sweep otherwise.  ``use_c=False``
+    short-circuits to numpy *without* triggering the first-use compile probe.
+    """
+    if engine in (None, "auto"):
+        if use_c is None:
+            forced = os.environ.get("REPRO_ENGINE")
+            if forced:
+                return get_engine(forced)
+        if use_c is False:
+            return _REGISTRY["numpy"]
+        c = _REGISTRY["c"]
+        if c.available():
+            return c
+        if use_c:
+            raise RuntimeError(c.why_unavailable())
+        return _REGISTRY["bitset"]
+    return get_engine(engine)
+
+
+def check_engine(engine: str | None) -> None:
+    """Early loud validation of an ``engine=`` argument without resolving
+    ``auto`` (so no compiler probe happens on the default path).  Raises the
+    same ValueError/RuntimeError as :func:`get_engine`."""
+    if engine in (None, "auto"):
+        return
+    get_engine(engine)
+
+
+def resolve_circulant(engine: str, n: int) -> str:
+    """Resolve the ``circulant_search`` candidate-batch pricer name.
+
+    ``"auto"`` picks ``"jax"`` when jax imports and n >= 4096 (where batch
+    pricing amortises), ``"numpy"`` otherwise.  An explicitly requested
+    backend must fail loudly, not degrade to the sequential pricer.
+    """
+    if engine == "auto":
+        return ("jax" if n >= 4096 and jax_circulant.jax_modules()[0] is not None
+                else "numpy")
+    if engine not in CIRCULANT_ENGINES:
+        raise ValueError(f"engine={engine!r} must be 'auto', 'numpy' or 'jax'")
+    if engine == "jax" and jax_circulant.jax_modules()[0] is None:
+        raise RuntimeError("jax engine requested but jax is unavailable")
+    return engine

@@ -1,0 +1,62 @@
+"""The ``Engine`` protocol every APSP pricing backend implements.
+
+An engine is a stateless singleton that knows how to run the two primitives
+the incremental evaluators need — batched BFS rows and BFS-DAG parent counts
+— on one substrate (C kernel, numpy, word-packed bitset, Pallas device
+sweep), plus capability flags the evaluator uses instead of branching on the
+engine *name*:
+
+- ``uses_nbr``: ``rows_bfs`` reads the evaluator's padded neighbour table,
+  so proposal edges must be reflected there before pricing.
+- ``needs_dense_mirror``: the evaluator must maintain the (n, n) float32
+  adjacency mirror (only the dense-matmul engine; 256 MB of dead weight at
+  N = 8192 for everyone else).
+- ``has_orbit_kernel``: ``fast_eval()`` returns a ``_fastpath.FastEval``
+  whose ``eval_orbit_swap`` prices whole orbit swaps in C, bypassing the
+  generic numpy delta logic.
+
+``available()`` is the availability probe (compiler present, jax importable,
+…); ``get_engine`` turns a negative probe into the canonical RuntimeError.
+All engines are bit-identical by contract — the property tests in
+``tests/test_incremental.py`` assert it — so engine choice moves wall time,
+never results.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Engine:
+    """One APSP pricing backend (see module docstring for the contract)."""
+
+    name: str = "?"
+    uses_nbr: bool = True
+    needs_dense_mirror: bool = False
+    has_orbit_kernel: bool = False
+    #: rows are priced by the accelerator kernel — the replica-sharded
+    #: polish routes its batched pricing through the Pallas sweep when set
+    device_sweep: bool = False
+
+    def available(self) -> bool:
+        return True
+
+    def why_unavailable(self) -> str:
+        return f"{self.name} engine requested but unavailable"
+
+    def fast_eval(self):
+        """The engine's ``_fastpath.FastEval`` handle, or None."""
+        return None
+
+    def rows_bfs(self, ev, sources: np.ndarray) -> np.ndarray:
+        """Hop-distance rows from ``sources`` on ``ev``'s current graph
+        (int32, unreachable = ``ev.sentinel``)."""
+        raise NotImplementedError
+
+    def parent_counts(self, ev) -> None:
+        """Refresh ``ev.npar`` from ``ev.dist``/``ev.nbr`` in place."""
+        from .. import metrics
+
+        ev.npar[...] = metrics._parent_counts(ev.adj, ev.dist, ev.nbr)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<Engine {self.name}>"

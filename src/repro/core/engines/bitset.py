@@ -1,0 +1,44 @@
+"""``engine="bitset"`` — word-packed uint64 frontier sweeps on the host.
+
+The fast no-compiler path at N >= 8192: frontier/visited sets packed along
+the source dimension, advanced by word-parallel OR/AND-NOT gathers over the
+neighbour table (``metrics.bitset_bfs_rows``).  Opportunistically swaps in
+the C variant of the same sweep (and the C ``parent_counts``) when the
+``_fastpath`` kernel happens to be compiled — bit-identical either way.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Engine
+
+
+class BitsetEngine(Engine):
+    name = "bitset"
+
+    def __init__(self):
+        self._fast = None
+        self._probed = False
+
+    def fast_eval(self):
+        if not self._probed:
+            self._probed = True
+            from .. import _fastpath
+
+            lib = _fastpath.get_lib()
+            if lib is not None:
+                self._fast = _fastpath.FastEval(lib)
+        return self._fast
+
+    def rows_bfs(self, ev, sources: np.ndarray) -> np.ndarray:
+        from .. import metrics
+
+        return metrics.bitset_bfs_rows(ev.nbr, sources, ev.sentinel,
+                                       fast=self.fast_eval())
+
+    def parent_counts(self, ev) -> None:
+        fast = self.fast_eval()
+        if fast is not None:
+            fast.parent_counts(ev.nbr, ev.dist, ev.npar)
+        else:
+            super().parent_counts(ev)

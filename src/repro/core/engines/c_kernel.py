@@ -1,0 +1,45 @@
+"""``engine="c"`` — the compiled ``_fastpath`` queue-BFS / orbit-delta kernel.
+
+Fastest when a system compiler exists; the availability probe is the lazy
+first-use compile in ``_fastpath.get_lib()`` (disabled by
+``REPRO_NO_C_KERNEL=1`` / ``REPRO_FASTPATH=0``, which is how the CI matrix
+forces the fallback engines).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Engine
+
+
+class CKernelEngine(Engine):
+    name = "c"
+    has_orbit_kernel = True
+
+    def _lib(self):
+        from .. import _fastpath
+
+        return _fastpath.get_lib()
+
+    def available(self) -> bool:
+        return self._lib() is not None
+
+    def why_unavailable(self) -> str:
+        return "C fast path requested but unavailable"
+
+    def fast_eval(self):
+        from .. import _fastpath
+
+        lib = self._lib()
+        return _fastpath.FastEval(lib) if lib is not None else None
+
+    def rows_bfs(self, ev, sources: np.ndarray) -> np.ndarray:
+        # the orbit kernel prices swaps without ever calling this, but the
+        # protocol keeps it available: the C word-packed sweep
+        from .. import metrics
+
+        return metrics.bitset_bfs_rows(ev.nbr, sources, ev.sentinel,
+                                       fast=self.fast_eval())
+
+    def parent_counts(self, ev) -> None:
+        self.fast_eval().parent_counts(ev.nbr, ev.dist, ev.npar)

@@ -1,0 +1,23 @@
+"""``engine="numpy"`` — the seed dense float32-matmul BFS.
+
+Keeps the (n, n) float32 adjacency mirror (``needs_dense_mirror``) and
+advances whole frontiers by BLAS matmul: O(n^2) per BFS level, the right
+trade only at small n or as the explicit-opt-out baseline the property tests
+diff every other engine against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .base import Engine
+
+
+class NumpyDenseEngine(Engine):
+    name = "numpy"
+    uses_nbr = False
+    needs_dense_mirror = True
+
+    def rows_bfs(self, ev, sources: np.ndarray) -> np.ndarray:
+        from .. import metrics
+
+        return metrics._bfs_rows(ev.a32, np.asarray(sources), ev.sentinel)

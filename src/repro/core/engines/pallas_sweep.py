@@ -1,0 +1,147 @@
+"""``engine="pallas"`` — the device word-packed sweep (``kernels.bfs_sweep``).
+
+Same packed-frontier algorithm as the host bitset engine, but the level loop
+runs inside one Pallas kernel with the frontier/visited/distance state in
+VMEM, using 32-bit words (TPU vector units have no 64-bit lanes).  On this
+CPU-only container the kernel executes in interpret mode (the
+``flash_attention``/``ssd_scan`` convention) so CI exercises it; on a real
+TPU/GPU the launcher flips ``set_interpret(False)`` and the identical kernel
+lowers to the device.
+
+``sharded_rows_totals`` is the replica-polish entry point: R stacked
+neighbour tables are priced in one ``shard_map`` over the replica axis, so
+each device sweeps its replicas' graphs locally and only the per-replica
+(total, max) scalars come home.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .base import Engine
+
+_INTERPRET = True
+_CACHE: dict = {}
+
+
+def set_interpret(v: bool) -> None:
+    """Flip Pallas interpret mode for the BFS sweep (False on real TPU)."""
+    global _INTERPRET
+    _INTERPRET = v
+    _CACHE.clear()
+
+
+def get_interpret() -> bool:
+    """Whether the sweep currently runs in Pallas interpret mode (the
+    benchmarks record this: interpret-mode timings measure interpreter
+    overhead, not device performance)."""
+    return _INTERPRET
+
+
+def _jax():
+    if "jax" not in _CACHE:
+        try:
+            import jax
+
+            _CACHE["jax"] = jax
+        except Exception:  # pragma: no cover - jax is a hard dep in CI
+            _CACHE["jax"] = None
+    return _CACHE["jax"]
+
+
+class PallasEngine(Engine):
+    name = "pallas"
+    device_sweep = True
+
+    def available(self) -> bool:
+        return _jax() is not None
+
+    def why_unavailable(self) -> str:
+        return "pallas engine requested but jax is unavailable"
+
+    def rows_bfs(self, ev, sources: np.ndarray) -> np.ndarray:
+        from ...kernels import bfs_sweep
+
+        return bfs_sweep.bfs_rows(ev.nbr, sources, ev.sentinel,
+                                  interpret=_INTERPRET)
+
+
+# ------------------------------------------------------------------------------
+# Replica-sharded batched pricing (large_search replica polish)
+# ------------------------------------------------------------------------------
+
+def _mesh_axis(r: int) -> int:
+    """Largest divisor of ``r`` that fits the local device count — the
+    replica axis length (1 on a single-device host: same math, one shard)."""
+    jax = _jax()
+    nd = len(jax.devices())
+    return max(d for d in range(1, min(r, nd) + 1) if r % d == 0)
+
+
+def _sharded_fn(r: int, n: int, kmax: int, sw_pad: int, bw: int, m: int,
+                sentinel: int, use_pallas: bool):
+    jax = _jax()
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ... import compat
+    from ...kernels import bfs_sweep
+
+    key = ("sharded", r, n, kmax, sw_pad, bw, m, sentinel, use_pallas)
+    fn = _CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def per_shard(nb, vm, F0):
+        if use_pallas:
+            rows = bfs_sweep._pallas_sweep(
+                nb.shape[0], n, kmax, sw_pad, bw, sentinel, _INTERPRET
+            )(nb, vm, F0)
+        else:
+            rows = jax.vmap(
+                functools.partial(bfs_sweep.sweep_rows_ref, sentinel=sentinel)
+            )(nb, vm, F0)
+        rows = rows[:, :m, :]
+        # per-source sums fit int32 only while n * sentinel <= 2^31 - 1
+        # (n <= 46340 with sentinel == n — guarded in sharded_rows_totals);
+        # the int64 grand total is finished on the host, where x64 is on
+        return (rows.sum(2, dtype=jnp.int32), rows.max((1, 2)))
+
+    nd = _mesh_axis(r)
+    mesh = Mesh(np.asarray(jax.devices()[:nd]), ("r",))
+    fn = jax.jit(compat.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P("r"), P("r"), P("r")), out_specs=(P("r"), P("r"))))
+    _CACHE[key] = fn
+    return fn
+
+
+def sharded_rows_totals(
+    nbrs: np.ndarray,
+    n_sources: int,
+    sentinel: int,
+    use_pallas: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Price R stacked graphs on the device mesh in one dispatch.
+
+    ``nbrs`` is (R, n, kmax) padded neighbour tables; BFS runs from sources
+    ``0..n_sources-1`` of every graph (the representative rows of the
+    symmetric tier).  Returns (totals (R,) int64, maxima (R,) int32) of the
+    (n_sources, n) distance rows — exactly what the polish accept rule needs,
+    so only 2R scalars leave the devices.
+    """
+    from ...kernels import bfs_sweep
+
+    r, n, kmax = nbrs.shape
+    m = n_sources
+    if n * sentinel > np.iinfo(np.int32).max:
+        # the device reduction accumulates per-source row sums in int32
+        # (jax x64 is off); one row sums to at most n * sentinel
+        raise NotImplementedError(
+            f"device pricing needs n * sentinel <= int32 max (n={n}, "
+            f"sentinel={sentinel})")
+    nb, vm, F0, sw_pad, bw = bfs_sweep.pack_batch(nbrs, np.arange(m))
+    rowsums, mx = _sharded_fn(r, n, kmax, sw_pad, bw, m, sentinel,
+                              use_pallas)(nb, vm, F0)
+    return np.asarray(rowsums).sum(1, dtype=np.int64), np.asarray(mx)

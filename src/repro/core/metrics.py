@@ -11,6 +11,7 @@ import dataclasses
 
 import numpy as np
 
+from . import engines
 from .graphs import Graph
 
 __all__ = [
@@ -535,8 +536,10 @@ class SymmetricAPSP:
     realise the global diameter (every row is a rotation of a representative
     row).  ``n_delta`` / ``n_full`` count the two pricing paths.
 
-    Three interchangeable engines price the BFS phases (all bit-identical,
-    asserted by the property tests), selected by ``engine=``:
+    The BFS phases are priced by an interchangeable engine (all
+    bit-identical, asserted by the property tests), selected by ``engine=``
+    and resolved through the ``core.engines`` registry — the single place
+    engine names are validated:
 
     - ``"c"`` — the ``_fastpath.eval_orbit_swap`` kernel: per-source queue
       BFS with cascade repair, compiled at first use.  Fastest when a system
@@ -547,16 +550,26 @@ class SymmetricAPSP:
       neighbour table.  This is the fast no-kernel path at N >= 8192 (and
       uses the C word-packed sweep for the BFS itself when the kernel
       happens to be available).
+    - ``"pallas"`` — the same packed sweep as a Pallas device kernel
+      (``kernels.bfs_sweep``, 32-bit words in VMEM); interpret mode on CPU.
     - ``"numpy"`` — the seed dense float32-matmul BFS (``_bfs_rows``); keeps
       an (n, n) float32 adjacency mirror, O(n^2) per BFS level.
 
     ``engine=None`` (or ``"auto"``) resolves to ``"c"`` when the kernel
-    compiles and ``"bitset"`` otherwise; ``use_c`` is the legacy knob
-    (``use_c=False`` forces ``"numpy"``, ``use_c=True`` requires ``"c"``)
-    and is overridden by an explicit ``engine=``.
+    compiles and ``"bitset"`` otherwise (``REPRO_ENGINE`` overrides the
+    auto choice); ``use_c`` is the legacy knob (``use_c=False`` forces
+    ``"numpy"``, ``use_c=True`` requires ``"c"``) and is overridden by an
+    explicit ``engine=``.
     """
 
-    ENGINES = ("c", "numpy", "bitset")
+    class _EngineNames:
+        """Live view of the registered row-engine names (``engines.register``
+        extends the registry after import, so a snapshot would go stale)."""
+
+        def __get__(self, obj, objtype=None):
+            return engines.ROWS_ENGINES
+
+    ENGINES = _EngineNames()
 
     def __init__(
         self,
@@ -567,8 +580,6 @@ class SymmetricAPSP:
         use_c: bool | None = None,
         engine: str | None = None,
     ):
-        from . import _fastpath
-
         n = adj.shape[0]
         if shift < 1 or n % shift:
             raise ValueError(f"shift={shift} must be a positive divisor of n={n}")
@@ -581,37 +592,21 @@ class SymmetricAPSP:
         self.adj = adj if adj.dtype == np.bool_ else adj.astype(bool)
         if not np.array_equal(self.adj, np.roll(np.roll(self.adj, shift, 0), shift, 1)):
             raise ValueError(f"adjacency is not invariant under rotation by {shift}")
-        # probe the C toolchain only on paths that can use it: use_c=False /
-        # engine="numpy" are explicit opt-outs and must not trigger the
-        # first-use compile attempt
-        lib = None
-        if engine in (None, "auto"):
-            if use_c is False:
-                engine = "numpy"
-            else:
-                lib = _fastpath.get_lib()
-                if lib is not None:
-                    engine = "c"
-                elif use_c:
-                    raise RuntimeError("C fast path requested but unavailable")
-                else:
-                    engine = "bitset"
-        elif engine in ("c", "bitset"):
-            lib = _fastpath.get_lib()
-        if engine not in self.ENGINES:
-            raise ValueError(f"engine={engine!r} must be one of {self.ENGINES}")
-        if engine == "c" and lib is None:
-            raise RuntimeError("C fast path requested but unavailable")
-        self.engine = engine
-        self.fast = _fastpath.FastEval(lib) if engine == "c" else None
-        # the bitset engine runs the generic numpy delta logic but swaps the
-        # BFS for the word-packed sweep (C variant of it when compiled)
-        self._bitfast = _fastpath.FastEval(lib) if engine == "bitset" and lib is not None else None
+        # single validation/resolution point for engine names; the registry
+        # probes the C toolchain only on paths that can use it (use_c=False /
+        # engine="numpy" are explicit opt-outs and never trigger the
+        # first-use compile attempt)
+        eng = engines.resolve_rows(engine, use_c=use_c)
+        self.engine = eng.name
+        self._eng = eng
+        # the orbit C kernel prices whole swaps without the generic numpy
+        # delta logic below; every other engine plugs into it via rows_bfs
+        self.fast = eng.fast_eval() if eng.has_orbit_kernel else None
         # the float32 adjacency mirror feeds only the dense-matmul BFS: for
         # the other engines it would be (n, n) of dead weight (256 MB at
-        # N=8192), so it exists only on the "numpy" engine
+        # N=8192), so it exists only when the engine asks for it
         self.a32 = None
-        if engine == "numpy":
+        if eng.needs_dense_mirror:
             self.a32 = np.empty((n, n), dtype=np.float32)
             self.a32[...] = self.adj
         # zero-init required: the C kernel epoch-stamps part of this buffer
@@ -631,35 +626,26 @@ class SymmetricAPSP:
         self.n_full = 0
 
     def _recount_parents(self) -> None:
-        """Refresh ``npar`` from dist/nbr (C kernel when available — the
-        numpy gather allocates an (s, n, k) temporary, heavy at N=8192)."""
-        fast = self.fast or self._bitfast
-        if fast is not None:
-            fast.parent_counts(self.nbr, self.dist, self.npar)
-        else:
-            self.npar[...] = _parent_counts(self.adj, self.dist, self.nbr)
+        """Refresh ``npar`` from dist/nbr through the engine (C kernel when
+        the engine has one — the numpy gather allocates an (s, n, k)
+        temporary, heavy at N=8192)."""
+        self._eng.parent_counts(self)
 
     def _rows_bfs(self, sources, removed=(), added=()) -> np.ndarray:
         """BFS rows from ``sources`` on the current graph with ``removed``
         edges deleted and ``added`` edges inserted (state reverted on exit),
-        via the dense matmul BFS or the word-packed bitset sweep."""
-        if self.engine == "bitset":
-            touched = [x for e in (*removed, *added) for x in e]
-            self._apply_edges(removed, added)
-            if touched:
-                self._refresh_nbr_rows(touched)
-            try:
-                return bitset_bfs_rows(self.nbr, sources, self.sentinel,
-                                       fast=self._bitfast)
-            finally:
-                self._revert_edges(removed, added)
-                if touched:
-                    self._refresh_nbr_rows(touched)
+        priced by the resolved engine's sweep."""
+        touched = [x for e in (*removed, *added) for x in e] \
+            if self._eng.uses_nbr else ()
         self._apply_edges(removed, added)
+        if touched:
+            self._refresh_nbr_rows(touched)
         try:
-            return _bfs_rows(self.a32, np.asarray(sources), self.sentinel)
+            return self._eng.rows_bfs(self, np.asarray(sources))
         finally:
             self._revert_edges(removed, added)
+            if touched:
+                self._refresh_nbr_rows(touched)
 
     _build_nbr = IncrementalAPSP._build_nbr
     _refresh_nbr_rows = IncrementalAPSP._refresh_nbr_rows

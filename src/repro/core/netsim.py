@@ -41,6 +41,28 @@ __all__ = [
 ]
 
 
+# Routing tables are expensive to build (Floyd closure) and every benchmark
+# in this module asks for one per call, so they are cached at module level,
+# keyed on the graph's identity (n + canonical edge tuple) rather than
+# smuggled onto the frozen Cluster dataclass via object.__setattr__ (which
+# broke the frozen contract and silently desynced when dataclasses.replace
+# copied the hidden attribute).  Bounded FIFO so sweeps over many topologies
+# cannot grow it without limit.
+_ROUTING_CACHE: dict[tuple[int, tuple], RoutingTable] = {}
+_ROUTING_CACHE_MAX = 64
+
+
+def _routing_table(graph: Graph) -> RoutingTable:
+    key = (graph.n, graph.edges)
+    rt = _ROUTING_CACHE.get(key)
+    if rt is None:
+        if len(_ROUTING_CACHE) >= _ROUTING_CACHE_MAX:
+            _ROUTING_CACHE.pop(next(iter(_ROUTING_CACHE)))
+        rt = RoutingTable.build(graph)
+        _ROUTING_CACHE[key] = rt
+    return rt
+
+
 @dataclasses.dataclass(frozen=True)
 class Cluster:
     """A topology + link model + per-node compute speed."""
@@ -51,12 +73,8 @@ class Cluster:
     mem_bw: float = 10e9  # local memory bandwidth (B/s) for memory-bound kernels
 
     def routing(self) -> RoutingTable:
-        # cached per instance
-        rt = getattr(self, "_rt", None)
-        if rt is None:
-            rt = RoutingTable.build(self.graph)
-            object.__setattr__(self, "_rt", rt)
-        return rt
+        # cached per graph in the module-level table above
+        return _routing_table(self.graph)
 
 
 def TAISHAN(graph: Graph) -> Cluster:

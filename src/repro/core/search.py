@@ -25,9 +25,12 @@ Three search tiers, matching Section 3.1 of the paper:
    that can warm-start from the best circulant (``large_search``).  The
    orbit SA prices each orbit swap through ``metrics.SymmetricAPSP`` —
    batched multi-edge delta updates from only the n/fold representative
-   sources — instead of a dense BFS per proposal, with a word-packed
-   bitset-frontier BFS backend (``engine="bitset"``) replacing the dense
-   matmul fallback at N >= 8192.
+   sources — instead of a dense BFS per proposal, with the pricing backend
+   resolved through the pluggable ``core.engines`` registry (C queue BFS,
+   word-packed bitset sweep at N >= 8192, the Pallas VMEM device sweep, or
+   the dense matmul baseline).  ``large_search(replicas=R)`` adds the
+   device-sharded replica polish: lockstep chains priced in one
+   ``shard_map`` dispatch per iteration.
 
 Every function takes an explicit ``seed`` and is bit-reproducible (the
 optional C kernel and the pure-python fallback consume identical pre-drawn
@@ -45,7 +48,7 @@ from collections.abc import Iterable
 
 import numpy as np
 
-from . import metrics
+from . import engines, metrics
 from .graphs import Graph, circulant, from_edges, random_hamiltonian_regular, ring
 
 __all__ = [
@@ -87,6 +90,7 @@ class SearchResult:
     evals_delta: int = 0  # incremental evaluations (delta path)
     evals_full: int = 0  # full-recompute fallbacks
     offsets: tuple[int, ...] | None = None  # circulant offsets, if applicable
+    compound_steps: int = 0  # multi-orbit proposals priced (moves_per_step > 1)
 
     @property
     def mpl_gap(self) -> float:
@@ -530,111 +534,15 @@ def _circulant_profile(n: int, offsets) -> tuple[float, float]:
 
 
 # --- JAX batched circulant pricing -------------------------------------------
-# The same packed frontier sweep as ``_circulant_profile``, jitted and
-# batched over candidate offset sets (each candidate's frontier is one row;
-# the while_loop advances every candidate's BFS level in lock step).  Exact
-# integer hop counts, so the values — and therefore the hillclimb trajectory
-# — are identical to the numpy path.
-
-_JAX_SWEEP_CACHE: dict = {}
-_JAX_CHUNK = 32  # candidates per jitted call (padded, so shapes stay static)
-
-
-def _jax_modules():
-    """(jax, jax.numpy) or (None, None); cached so the numpy path pays the
-    import probe once."""
-    if "modules" not in _JAX_SWEEP_CACHE:
-        try:
-            import jax
-            import jax.numpy as jnp
-
-            _JAX_SWEEP_CACHE["modules"] = (jax, jnp)
-        except Exception:  # pragma: no cover - jax always present in CI
-            _JAX_SWEEP_CACHE["modules"] = (None, None)
-    return _JAX_SWEEP_CACHE["modules"]
-
-
-def _jax_sweep(n: int, m: int):
-    """Jitted batched frontier sweep for (chunk, m) shift arrays on C_n.
-
-    Returns a function shifts -> (total_hops, diameter, connected) per
-    candidate row.  Shift lists may contain duplicates (padding) — OR-ing a
-    frontier with itself is a no-op, so the counts stay exact.
-    """
-    key = (n, m)
-    fn = _JAX_SWEEP_CACHE.get(key)
-    if fn is not None:
-        return fn
-    jax, jnp = _jax_modules()
-
-    def sweep(shifts):
-        b = shifts.shape[0]
-        idx = (jnp.arange(n)[None, None, :] - shifts[:, :, None]) % n  # (b, m, n)
-        reach0 = jnp.zeros((b, n), bool).at[:, 0].set(True)
-        zeros = jnp.zeros((b,), jnp.int32)
-
-        def body(st):
-            d, total, diam, reach, frontier = st
-            nxt = jnp.zeros_like(frontier)
-            for i in range(m):  # static unroll: m <= 2k shifts
-                nxt = nxt | jnp.take_along_axis(frontier, idx[:, i, :], axis=1)
-            newf = nxt & ~reach
-            cnt = newf.sum(1, dtype=jnp.int32)
-            d = d + 1
-            return (d, total + d * cnt, jnp.where(cnt > 0, d, diam),
-                    reach | newf, newf)
-
-        st = (jnp.int32(0), zeros, zeros, reach0, reach0)
-        _, total, diam, reach, _ = jax.lax.while_loop(
-            lambda st: st[4].any(), body, st)
-        return total, diam, reach.all(1)
-
-    fn = jax.jit(sweep)
-    _JAX_SWEEP_CACHE[key] = fn
-    return fn
+# The jitted batched twin of ``_circulant_profile`` lives in
+# ``engines.jax_circulant`` (registry name "jax"); ``_profile_batch`` below
+# is the thin dispatch the hillclimb consumes — values are bit-identical to
+# the sequential pricer, so the trajectory never depends on the engine.
 
 
 def _profile_batch(n: int, offset_lists, engine: str) -> "Iterable[tuple[float, float]]":
-    """(MPL, diameter) for a batch of full offset lists (all the same length).
-
-    ``engine="numpy"`` prices each list with ``_circulant_profile`` —
-    lazily, so a caller that stops consuming after an acceptance pays
-    exactly the sequential cost; ``engine="jax"`` packs the batch into
-    padded ``_JAX_CHUNK``-row chunks and prices each chunk in one jitted
-    sweep.  Values are bit-identical.
-    """
-    if engine != "jax" or _jax_modules()[0] is None:
-        return (_circulant_profile(n, offs) for offs in offset_lists)
-    if not offset_lists:
-        return iter(())
-    shifts = []
-    for offs in offset_lists:
-        ss = sorted({s % n for s in offs} - {0})
-        shifts.append(sorted({sh for s in ss for sh in (s, n - s)}))
-    m = max(len(s) for s in shifts)
-    arr = np.empty((len(shifts), m), dtype=np.int32)
-    for i, s in enumerate(shifts):
-        arr[i] = np.resize(s, m)  # cyclic pad: duplicate shifts are no-ops
-    sweep = _jax_sweep(n, m)
-
-    def chunks():
-        # lazy per-chunk pricing: a caller that stops consuming after an
-        # acceptance never pays for the unexamined chunks (mirrors the
-        # numpy generator)
-        for lo in range(0, len(shifts), _JAX_CHUNK):
-            chunk = arr[lo : lo + _JAX_CHUNK]
-            real = len(chunk)
-            if real < _JAX_CHUNK:
-                chunk = np.concatenate(
-                    [chunk, np.repeat(chunk[:1], _JAX_CHUNK - real, axis=0)])
-            total, diam, conn = (np.asarray(x) for x in sweep(chunk))
-            for i in range(real):
-                if conn[i]:
-                    yield (int(total[i]) / (n - 1), float(diam[i]))
-                else:
-                    yield (float("inf"), float("inf"))
-
-    return chunks()
+    return engines.jax_circulant.profile_batch(
+        n, offset_lists, engine, _circulant_profile)
 
 
 def circulant_search(
@@ -653,22 +561,16 @@ def circulant_search(
     offset list, no graph construction), so 512/1024-vertex searches finish
     in seconds.
 
-    ``engine`` selects the candidate pricer: ``"numpy"`` prices candidates
-    one at a time; ``"jax"`` batches each position sweep through a jitted
-    packed frontier sweep (``_jax_sweep``) — the accelerator path for
+    ``engine`` selects the candidate pricer (resolved and validated by the
+    ``core.engines`` registry): ``"numpy"`` prices candidates one at a
+    time; ``"jax"`` batches each position sweep through a jitted packed
+    frontier sweep (``engines.jax_circulant``) — the accelerator path for
     N >= 8192 offset batches.  ``"auto"`` picks ``"jax"`` when jax imports
     and n >= 4096, ``"numpy"`` otherwise.  The pricers return identical
     values and candidates are accepted in the same order, so the trajectory
     (and the result) is bit-identical across engines at a given seed.
     """
-    if engine == "auto":
-        engine = "jax" if n >= 4096 and _jax_modules()[0] is not None else "numpy"
-    if engine not in ("numpy", "jax"):
-        raise ValueError(f"engine={engine!r} must be 'auto', 'numpy' or 'jax'")
-    if engine == "jax" and _jax_modules()[0] is None:
-        # an explicitly requested backend must fail loudly, not degrade to
-        # the sequential pricer (matches the engine="c" convention)
-        raise RuntimeError("jax engine requested but jax is unavailable")
+    engine = engines.resolve_circulant(engine, n)
     rng = np.random.default_rng(seed)
     half = k // 2
     has_anti = k % 2 == 1  # odd degree needs the antipodal offset n/2
@@ -780,6 +682,46 @@ def _orbit(n: int, s: int, u: int, v: int) -> frozenset[tuple[int, int]]:
     return frozenset(out)
 
 
+# compound-move gate: moves_per_step > 1 arms multi-orbit proposals once the
+# single-move accept rate over a _COMPOUND_WINDOW-proposal window drops
+# below _COMPOUND_RATE (the near-convergence collapse the ROADMAP names)
+_COMPOUND_WINDOW = 50
+_COMPOUND_RATE = 0.05
+
+
+def _draw_orbit_swap(rng, work_list, work_chords, ring_edges, n, s, fold):
+    """Draw one 2-orbit swap against ``(work_list, work_chords)``.
+
+    Returns ``(i1, i2, no1, no2, new_edges, remaining)`` or None for an
+    invalid draw.  Consumes the PRNG exactly like the classic inline
+    single-move proposal, so the ``moves_per_step=1`` trajectory is
+    bit-identical to the historical one.
+    """
+    i1, i2 = rng.choice(len(work_list), size=2, replace=False)
+    o1, o2 = work_list[i1], work_list[i2]
+    (u1, v1) = next(iter(o1))
+    (u2, v2) = next(iter(o2))
+    # orbit-level swap with a random relative rotation of the second orbit
+    tshift = int(rng.integers(fold)) * s
+    if rng.integers(2):
+        na, nb = (u1, (v2 + tshift) % n), ((u2 + tshift) % n, v1)
+    else:
+        na, nb = (u1, (u2 + tshift) % n), (v1, (v2 + tshift) % n)
+    if na[0] == na[1] or nb[0] == nb[1]:
+        return None
+    no1, no2 = _orbit(n, s, *na), _orbit(n, s, *nb)
+    # orbit sizes must be conserved so degrees are conserved
+    if len(no1) + len(no2) != len(o1) + len(o2):
+        return None
+    remaining = work_chords - set(o1) - set(o2)
+    new_edges = set(no1) | set(no2)
+    if len(new_edges) != len(no1) + len(no2):
+        return None
+    if new_edges & (remaining | ring_edges):
+        return None
+    return int(i1), int(i2), no1, no2, new_edges, remaining
+
+
 def _symmetric_random_start(
     n: int, k: int, s: int, rng: np.random.Generator, max_tries: int = 4000
 ) -> set[frozenset[tuple[int, int]]] | None:
@@ -849,6 +791,7 @@ def symmetric_sa_search(
     start_offsets: tuple[int, ...] | None = None,
     incremental: bool = True,
     engine: str | None = None,
+    moves_per_step: int = 1,
 ) -> SearchResult:
     """SA over *orbit-level* edge swaps of graphs with ``fold``-fold
     rotational symmetry (paper: 'random iteration of Hamiltonian graphs with
@@ -874,16 +817,28 @@ def symmetric_sa_search(
     ``engine`` picks the ``SymmetricAPSP`` backend (only meaningful with
     ``incremental=True``): ``"c"`` queue-BFS kernel, ``"bitset"``
     word-packed frontier sweeps (the fast no-compiler path, sized for
-    N >= 8192), ``"numpy"`` dense matmul BFS, or ``None``/``"auto"`` — C
-    kernel when it compiles, bitset otherwise.  All engines are
-    bit-identical, so ``engine`` never changes the result — only the wall
-    time (see docs/ARCHITECTURE.md for the selection matrix).
+    N >= 8192), ``"pallas"`` the same sweep as a VMEM device kernel
+    (interpret mode on CPU), ``"numpy"`` dense matmul BFS, or
+    ``None``/``"auto"`` — C kernel when it compiles, bitset otherwise.
+    All engines are bit-identical, so ``engine`` never changes the result —
+    only the wall time (see docs/ARCHITECTURE.md for the selection matrix).
+
+    ``moves_per_step > 1`` arms compound proposals: once the single-move
+    accept rate collapses near convergence (below ``_COMPOUND_RATE`` over a
+    ``_COMPOUND_WINDOW``-proposal window), each step samples up to
+    ``moves_per_step`` 2-orbit swaps against a working copy of the orbit
+    set and prices the merged multi-orbit change in one batched
+    ``evaluate_swap`` — escaping the local basins single swaps cannot.
+    The default (1) leaves the classic trajectory untouched (asserted by
+    the trajectory tests); compound steps consume extra PRNG draws only
+    after the rate gate opens, so runs remain bit-reproducible per seed.
     """
-    if engine not in (None, "auto", *metrics.SymmetricAPSP.ENGINES):
-        # validate even when incremental=False (where engine is unused), so
-        # a typo'd engine= never silently runs the dense pricer
-        raise ValueError(
-            f"engine={engine!r} must be one of {metrics.SymmetricAPSP.ENGINES} or 'auto'")
+    # the registry is the single validation point — check engine= even when
+    # incremental=False (where it is unused), so a typo'd engine= never
+    # silently runs the dense pricer
+    engines.check_engine(engine)
+    if moves_per_step < 1:
+        raise ValueError(f"moves_per_step={moves_per_step} must be >= 1")
     fold_i = int(fold)
     if fold_i != fold or fold_i < 1 or n % fold_i:
         raise ValueError(
@@ -930,63 +885,71 @@ def symmetric_sa_search(
     for orb in orb_list:
         chord_edges |= set(orb)
 
+    win_n = win_acc = 0
+    compound_on = False
+    compound_steps = 0
     for _ in range(n_iter):
         t *= gamma
         if len(orb_list) < 2:
             break
-        i1, i2 = rng.choice(len(orb_list), size=2, replace=False)
-        o1, o2 = orb_list[i1], orb_list[i2]
-        (u1, v1) = next(iter(o1))
-        (u2, v2) = next(iter(o2))
-        # orbit-level swap with a random relative rotation of the second orbit
-        tshift = int(rng.integers(fold)) * s
-        if rng.integers(2):
-            na, nb = (u1, (v2 + tshift) % n), ((u2 + tshift) % n, v1)
-        else:
-            na, nb = (u1, (u2 + tshift) % n), (v1, (v2 + tshift) % n)
-        if na[0] == na[1] or nb[0] == nb[1]:
+        # draw up to nmoves 2-orbit swaps against a working copy of the
+        # orbit state; nmoves == 1 reproduces the classic proposal exactly
+        nmoves = moves_per_step if compound_on else 1
+        work_list, work_chords = orb_list, chord_edges
+        got = 0
+        for _m in range(nmoves):
+            if len(work_list) < 2:
+                break
+            mv = _draw_orbit_swap(rng, work_list, work_chords, ring_edges,
+                                  n, s, fold)
+            if mv is None:
+                continue
+            i1, i2, no1, no2, new_edges, remaining = mv
+            work_list = [o for idx, o in enumerate(work_list)
+                         if idx not in (i1, i2)] + [no1, no2]
+            work_chords = remaining | new_edges
+            got += 1
+        if got == 0:
             continue
-        no1, no2 = _orbit(n, s, *na), _orbit(n, s, *nb)
-        # orbit sizes must be conserved so degrees are conserved
-        if len(no1) + len(no2) != len(o1) + len(o2):
-            continue
-        remaining = chord_edges - set(o1) - set(o2)
-        new_edges = set(no1) | set(no2)
-        if len(new_edges) != len(no1) + len(no2):
-            continue
-        if new_edges & (remaining | ring_edges):
-            continue
+        if got > 1:
+            compound_steps += 1
+        # edges in both states are removed-then-re-added: cancel them (set
+        # differences of orbit-closed sets stay orbit-closed)
+        removed = sorted(chord_edges - work_chords)
+        added = sorted(work_chords - chord_edges)
         if ev is not None:
-            # edges in both sets are removed-then-re-added: cancel them (set
-            # differences of orbit-closed sets stay orbit-closed)
-            old_edges = set(o1) | set(o2)
-            tok = ev.evaluate_swap(sorted(old_edges - new_edges),
-                                   sorted(new_edges - old_edges))
+            tok = ev.evaluate_swap(removed, added)
             new_mpl = tok.mpl
             new_d = float(tok.diam) if tok.diam < n else float("inf")
         else:
             # mutate adjacency in place on a copy restricted to changed entries
             a2 = adj.copy()
-            for i, j in set(o1) | set(o2):
+            for i, j in removed:
                 a2[i, j] = a2[j, i] = False
-            for i, j in new_edges:
+            for i, j in added:
                 a2[i, j] = a2[j, i] = True
             new_mpl, new_d = _mpl_fast(a2, n_sources=s)
+        win_n += 1
         dm = new_mpl - cur_mpl
         if dm < 0 or rng.random() < math.exp(-dm / max(t, 1e-12)):
-            trial = [o for idx, o in enumerate(orb_list) if idx not in (i1, i2)] + [no1, no2]
-            orb_list, cur_mpl, cur_d = trial, new_mpl, new_d
-            chord_edges = remaining | new_edges
+            orb_list, cur_mpl, cur_d = work_list, new_mpl, new_d
+            chord_edges = work_chords
             if ev is not None:
                 ev.commit(tok)
             else:
                 adj = a2
             accepted += 1
+            win_acc += 1
             if (cur_mpl, cur_d) < (best_mpl, best_d):
                 best_orbits, best_mpl, best_d = set(orb_list), cur_mpl, cur_d
                 history.append(best_mpl)
                 if best_mpl <= tgt + 1e-9:
                     break
+        if moves_per_step > 1 and win_n >= _COMPOUND_WINDOW:
+            # the gate is adaptive both ways: compound moves arm when the
+            # single-move accept rate collapses and disarm if it recovers
+            compound_on = win_acc < _COMPOUND_RATE * win_n
+            win_n = win_acc = 0
 
     edges = set(ring_edges)
     for orb in best_orbits:
@@ -1003,6 +966,200 @@ def symmetric_sa_search(
         history=history,
         evals_delta=ev.n_delta if ev is not None else 0,
         evals_full=ev.n_full if ev is not None else 0,
+        compound_steps=compound_steps,
+    )
+
+
+# --------------------------------------------------------------------------------
+# Tier 3c: device-sharded replica polish (shard_map over the replica axis)
+# --------------------------------------------------------------------------------
+
+class _PolishChain:
+    """One replica of the device-priced orbit polish: host-side orbit state
+    plus the padded neighbour table the device sweep prices from."""
+
+    __slots__ = ("rng", "orb_list", "chord_edges", "adj", "nbr",
+                 "cur_mpl", "cur_d", "best_orbits", "best_mpl", "best_d", "t")
+
+    def __init__(self, rng, orb_list, adj, t_start):
+        self.rng = rng
+        self.orb_list = list(orb_list)
+        self.chord_edges = {e for orb in orb_list for e in orb}
+        self.adj = adj
+        self.nbr = metrics._nbr_table(adj)
+        self.t = t_start
+        self.cur_mpl = self.cur_d = float("inf")
+        self.best_orbits = set(self.orb_list)
+        self.best_mpl = self.best_d = float("inf")
+
+    def trial_nbr(self, removed, added) -> np.ndarray:
+        """Neighbour table of the proposal graph (degrees are conserved by
+        the orbit-size check, so kmax never grows)."""
+        for u, v in removed:
+            self.adj[u, v] = self.adj[v, u] = False
+        for u, v in added:
+            self.adj[u, v] = self.adj[v, u] = True
+        try:
+            out = self.nbr.copy()
+            for u in {x for e in (*removed, *added) for x in e}:
+                ws = np.nonzero(self.adj[u])[0]
+                out[u, :] = -1
+                out[u, : len(ws)] = ws
+            return out
+        finally:
+            for u, v in added:
+                self.adj[u, v] = self.adj[v, u] = False
+            for u, v in removed:
+                self.adj[u, v] = self.adj[v, u] = True
+
+    def commit(self, removed, added, work_list, work_chords, nbr, mpl, d):
+        for u, v in removed:
+            self.adj[u, v] = self.adj[v, u] = False
+        for u, v in added:
+            self.adj[u, v] = self.adj[v, u] = True
+        self.nbr = nbr
+        self.orb_list, self.chord_edges = work_list, work_chords
+        self.cur_mpl, self.cur_d = mpl, d
+
+
+def _replica_polish(
+    n: int,
+    k: int,
+    seed: int,
+    n_iter: int,
+    fold: int,
+    start_orbits,
+    engine: str | None,
+    replicas: int,
+    exchange_every: int = 50,
+    t_start: float = 0.05,
+    t_end: float = 1e-4,
+) -> SearchResult:
+    """Parallel-replica orbit polish with device-batched pricing.
+
+    ``replicas`` lockstep annealing chains share the circulant warm start,
+    each on its own PRNG stream (``[seed, r]``, replica 0 protected — the
+    ``sa_search`` exchange semantics).  Every iteration each chain draws one
+    orbit swap; the proposals' full representative-row BFS sweeps are then
+    priced in **one** device dispatch: the R neighbour tables are stacked
+    and pushed through ``engines.pallas_sweep.sharded_rows_totals``, a
+    ``shard_map`` over the replica mesh axis, so each device sweeps its
+    replicas' graphs in VMEM (the Pallas kernel when the resolved engine is
+    the device sweep, its jnp twin otherwise) and only per-replica
+    (total, max) scalars come home.  Pricing is exact integer hop counts, so
+    the walk is bit-reproducible per seed and engine-independent.
+
+    Every ``exchange_every`` iterations the globally best state replaces the
+    worst non-protected chain, exactly like ``sa_search``.
+    """
+    from .engines import pallas_sweep
+
+    use_pallas = engines.resolve_rows(engine).device_sweep
+    s = n // fold
+    gamma = math.exp(math.log(t_end / t_start) / n_iter)
+    ring_edges = {(i, (i + 1) % n) for i in range(n - 1)} | {(0, n - 1)}
+
+    def adj_of(orbs) -> np.ndarray:
+        a = np.zeros((n, n), dtype=bool)
+        for i, j in ring_edges:
+            a[i, j] = a[j, i] = True
+        for orb in orbs:
+            for i, j in orb:
+                a[i, j] = a[j, i] = True
+        return a
+
+    start = sorted(start_orbits, key=sorted)
+    chains = [_PolishChain(np.random.default_rng([seed, r]), start,
+                           adj_of(start), t_start)
+              for r in range(replicas)]
+    norm = s * (n - 1)
+    # all chains share the warm start: one stacked pricing seeds cur/best
+    tot0, mx0 = pallas_sweep.sharded_rows_totals(
+        np.stack([chains[0].nbr]), s, n, use_pallas=use_pallas)
+    mpl0 = tot0[0] / norm if mx0[0] < n else float("inf")
+    d0 = float(mx0[0]) if mx0[0] < n else float("inf")
+    for ch in chains:
+        ch.cur_mpl = ch.best_mpl = mpl0
+        ch.cur_d = ch.best_d = d0
+
+    accepted = 0
+    priced = 0
+    history = [mpl0]
+    global_best = (mpl0, d0)
+    nbr_stack = np.empty((replicas,) + chains[0].nbr.shape, dtype=np.int32)
+    for it in range(n_iter):
+        proposals: list = [None] * replicas
+        for r, ch in enumerate(chains):
+            ch.t *= gamma
+            nbr_stack[r] = ch.nbr  # invalid draws price the unchanged graph
+            if len(ch.orb_list) < 2:
+                continue
+            mv = _draw_orbit_swap(ch.rng, ch.orb_list, ch.chord_edges,
+                                  ring_edges, n, s, fold)
+            if mv is None:
+                continue
+            i1, i2, no1, no2, new_edges, remaining = mv
+            work_list = [o for idx, o in enumerate(ch.orb_list)
+                         if idx not in (i1, i2)] + [no1, no2]
+            work_chords = remaining | new_edges
+            removed = sorted(ch.chord_edges - work_chords)
+            added = sorted(work_chords - ch.chord_edges)
+            tn = ch.trial_nbr(removed, added)
+            nbr_stack[r] = tn
+            proposals[r] = (removed, added, work_list, work_chords, tn)
+        if not any(p is not None for p in proposals):
+            continue
+        totals, maxima = pallas_sweep.sharded_rows_totals(
+            nbr_stack, s, n, use_pallas=use_pallas)
+        for r, ch in enumerate(chains):
+            if proposals[r] is None:
+                continue
+            priced += 1
+            new_mpl = totals[r] / norm if maxima[r] < n else float("inf")
+            new_d = float(maxima[r]) if maxima[r] < n else float("inf")
+            dm = new_mpl - ch.cur_mpl
+            if not (dm < 0 or ch.rng.random() < math.exp(-dm / max(ch.t, 1e-12))):
+                continue
+            ch.commit(*proposals[r], new_mpl, new_d)
+            accepted += 1
+            if (ch.cur_mpl, ch.cur_d) < (ch.best_mpl, ch.best_d):
+                ch.best_orbits = set(ch.orb_list)
+                ch.best_mpl, ch.best_d = ch.cur_mpl, ch.cur_d
+                if (ch.best_mpl, ch.best_d) < global_best:
+                    global_best = (ch.best_mpl, ch.best_d)
+                    history.append(ch.best_mpl)
+        if replicas > 1 and (it + 1) % exchange_every == 0 and it + 1 < n_iter:
+            gb = min(range(replicas),
+                     key=lambda r: (chains[r].best_mpl, chains[r].best_d, r))
+            worst = max(range(1, replicas),
+                        key=lambda r: (chains[r].cur_mpl, chains[r].cur_d, -r))
+            if (chains[gb].best_mpl, chains[gb].best_d) < \
+                    (chains[worst].cur_mpl, chains[worst].cur_d):
+                ch = chains[worst]
+                ch.orb_list = sorted(chains[gb].best_orbits, key=sorted)
+                ch.chord_edges = {e for orb in ch.orb_list for e in orb}
+                ch.adj = adj_of(ch.orb_list)
+                ch.nbr = metrics._nbr_table(ch.adj)
+                ch.cur_mpl, ch.cur_d = chains[gb].best_mpl, chains[gb].best_d
+
+    gb = min(range(replicas),
+             key=lambda r: (chains[r].best_mpl, chains[r].best_d, r))
+    best = chains[gb]
+    edges = set(ring_edges)
+    for orb in best.best_orbits:
+        edges |= set(orb)
+    g = from_edges(n, edges, f"({n},{k})-Suboptimal")
+    return SearchResult(
+        graph=g,
+        mpl=best.best_mpl,
+        diameter=best.best_d,
+        mpl_lb=metrics.mpl_lower_bound(n, k),
+        d_lb=metrics.diameter_lower_bound(n, k),
+        iterations=n_iter,
+        accepted=accepted,
+        history=history,
+        replicas=replicas,
+        evals_full=priced,  # device pricing always sweeps the full rows
     )
 
 
@@ -1018,37 +1175,42 @@ def large_search(
     fold: int = 4,
     polish: bool = True,
     engine: str | None = None,
+    replicas: int = 1,
+    exchange_every: int = 50,
 ) -> SearchResult:
     """Large-N tier: fast circulant hillclimb, then orbit-level SA polish
     warm-started from the best circulant (when ``fold`` divides ``n``).
 
     Returns whichever of the two stages found the lower (MPL, diameter).
     A pinned offset set in ``known_optimal.KNOWN_CIRCULANT_OFFSETS`` skips
-    the hillclimb entirely (seed 0 reproduces the pinning run).  The polish
-    stage prices orbit swaps through ``metrics.SymmetricAPSP`` (delta updates
-    from the n/fold representative sources), which keeps it practical up to
-    N=16384 — pinned offsets exist for 2048..16384 at degrees 4/6/8.
+    the hillclimb entirely (seed 0 reproduces the pinning run).  With
+    ``replicas=1`` (default) the polish stage prices orbit swaps through
+    ``metrics.SymmetricAPSP`` (delta updates from the n/fold representative
+    sources), which keeps it practical up to N=16384 — pinned offsets exist
+    for 2048..16384 at degrees 4/6/8.
 
-    ``engine`` is forwarded to ``symmetric_sa_search`` (and through it to
-    ``metrics.SymmetricAPSP``): ``None``/``"auto"`` resolves to the C queue
-    BFS kernel when one compiles and to the word-packed ``"bitset"`` sweep
-    otherwise; every engine is bit-identical, so the choice affects wall
-    time only.  The hillclimb stage independently auto-selects its candidate
-    pricer (``circulant_search``'s jax batch sweep at n >= 4096).
+    ``replicas > 1`` switches the polish to the **device-sharded replica
+    tier** (``_replica_polish``): R lockstep annealing chains (replica 0
+    protected, best-into-worst exchange every ``exchange_every`` iterations
+    — the ``sa_search`` semantics) whose proposals are priced in one
+    ``shard_map`` dispatch per iteration, each device sweeping its replicas'
+    packed-frontier BFS locally — the Pallas VMEM kernel when
+    ``engine="pallas"``, its jitted jnp twin otherwise.
+
+    ``engine`` is forwarded to the polish stage (and through it to the
+    ``core.engines`` registry, which validates it): ``None``/``"auto"``
+    resolves to the C queue BFS kernel when one compiles and to the
+    word-packed ``"bitset"`` sweep otherwise; every engine is bit-identical,
+    so the choice affects wall time only.  The hillclimb stage independently
+    auto-selects its candidate pricer (``circulant_search``'s jax batch
+    sweep at n >= 4096).
     """
     from .known_optimal import KNOWN_CIRCULANT_OFFSETS
 
     # surface engine problems here: the polish try-block below is defensive
     # against walk failures and would silently swallow a typo'd engine= or a
     # C request on a compiler-less box, returning the unpolished circulant
-    if engine not in (None, "auto", *metrics.SymmetricAPSP.ENGINES):
-        raise ValueError(
-            f"engine={engine!r} must be one of {metrics.SymmetricAPSP.ENGINES} or 'auto'")
-    if engine == "c":
-        from . import _fastpath
-
-        if _fastpath.get_lib() is None:
-            raise RuntimeError("C fast path requested but unavailable")
+    engines.check_engine(engine)
 
     pinned = KNOWN_CIRCULANT_OFFSETS.get((n, k)) if seed == 0 else None
     if pinned is not None:
@@ -1065,9 +1227,15 @@ def large_search(
         return res_c
     try:
         orbits = _circulant_orbits(n, n // fold, res_c.offsets)
-        res_s = symmetric_sa_search(
-            n, k, seed=seed, n_iter=max(200, (budget or 400) * 2),
-            fold=fold, start_orbits=orbits, engine=engine)
+        if replicas > 1:
+            res_s = _replica_polish(
+                n, k, seed=seed, n_iter=max(200, (budget or 400) * 2),
+                fold=fold, start_orbits=orbits, engine=engine,
+                replicas=replicas, exchange_every=exchange_every)
+        else:
+            res_s = symmetric_sa_search(
+                n, k, seed=seed, n_iter=max(200, (budget or 400) * 2),
+                fold=fold, start_orbits=orbits, engine=engine)
     except (RuntimeError, ValueError):  # pragma: no cover - defensive
         return res_c
     return res_s if (res_s.mpl, res_s.diameter) < (res_c.mpl, res_c.diameter) else res_c

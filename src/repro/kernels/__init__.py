@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the compute hot spots: flash attention (the
-quadratic attention term) and the Mamba2 SSD intra-chunk scan.  ``ops``
-holds the jit'd wrappers; ``ref`` the pure-jnp oracles."""
-from . import ops, ref
+quadratic attention term), the Mamba2 SSD intra-chunk scan, and the
+word-packed BFS frontier sweep (``bfs_sweep``) behind the topology-search
+``engine="pallas"`` backend.  ``ops`` holds the jit'd wrappers; ``ref``
+the pure-jnp oracles."""
+from . import bfs_sweep, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["bfs_sweep", "ops", "ref"]

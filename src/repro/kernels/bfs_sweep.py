@@ -1,0 +1,218 @@
+"""Word-packed BFS frontier sweep as a Pallas kernel (the device engine).
+
+This is the same algorithm as ``repro.core.metrics.bitset_bfs_rows`` — the
+frontier/visited sets packed into machine words along the *source* dimension,
+one BFS level advancing every source at once with word-parallel OR/AND-NOT
+sweeps over the padded neighbour table:
+
+    N[v]  = OR_{u in nbr(v)} F[u]      (gather over the neighbour table)
+    newF  = N & ~V;  V |= newF
+
+— but executed on the accelerator: the whole level loop runs inside one
+``pallas_call`` with the frontier (F), visited (V) and distance state living
+in VMEM for the duration of the sweep, instead of round-tripping numpy
+temporaries through host RAM per level.  Words are **32-bit** (``uint32``):
+TPU vector units have no 64-bit lanes, so the uint64 packing of the host
+bitset engine would not lower — the bit layout here is the little-endian
+lower/upper half split of the host engine's uint64 words, and the resulting
+distances are bit-identical (asserted by the property tests in
+``tests/test_incremental.py``).
+
+Grid layout: ``(batch, source word-blocks)``.  Every grid cell owns
+``block_words`` words (``block_words * 32`` sources) of frontier state for
+one graph — source blocks are fully independent BFS problems, so the grid is
+embarrassingly parallel and the per-cell VMEM footprint stays bounded:
+at N = 16384, k = 8, ``block_words = 4`` the cell holds two (n, 4) uint32
+bitsets (256 KB each), the (n, k) neighbour table/mask (1 MB) and a
+(128, n) int32 distance tile (8 MB) — inside the ~16 MB VMEM budget.  The
+batch axis serves the replica-sharded polish tier: `shard_map` splits it
+across devices and each device sweeps its replicas' graphs locally.
+
+``interpret=True`` is the CPU path (this container is CPU-only; CI exercises
+the kernel in interpret mode), mirroring the ``flash_attention``/``ssd_scan``
+convention.  ``sweep_rows_ref`` is the pure-jnp oracle — identical math
+without the Pallas launch, usable on any backend and under ``vmap``.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+WORD = 32  # uint32 packing: TPU-safe (no 64-bit vector lanes)
+BLOCK_WORDS = 4  # source words per grid cell (128 sources)
+
+__all__ = [
+    "WORD",
+    "BLOCK_WORDS",
+    "bfs_rows",
+    "bfs_rows_batched",
+    "pack_batch",
+    "pack_frontier",
+    "pack_nbr",
+    "sweep_rows_ref",
+]
+
+_CACHE: dict = {}
+
+
+def pack_nbr(nbr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(gather table, validity word-mask) from a padded neighbour table.
+
+    Pad entries (< 0) are redirected to vertex 0 and masked with an all-zero
+    word so the in-kernel gather needs no bounds logic.
+    """
+    valid = nbr >= 0
+    nb = np.where(valid, nbr, 0).astype(np.int32)
+    vm = np.where(valid, np.uint32(0xFFFFFFFF), np.uint32(0))
+    return nb, vm
+
+
+def pack_frontier(n: int, sources: np.ndarray, sw_pad: int) -> np.ndarray:
+    """(n, sw_pad) uint32 seed frontier: bit j of word w set at vertex
+    ``sources[w * 32 + j]`` — the 32-bit half-word view of the host bitset
+    engine's uint64 packing."""
+    F0 = np.zeros((n, sw_pad), dtype=np.uint32)
+    m = len(sources)
+    if m:
+        j = np.arange(m)
+        np.bitwise_or.at(F0, (np.asarray(sources, dtype=np.int64), j >> 5),
+                         np.uint32(1) << (j & 31).astype(np.uint32))
+    return F0
+
+
+def _unpack_bits(words, jnp):
+    """(n, w) uint32 -> (w*32, n) bool; bit j of word w = row w*32 + j."""
+    n, w = words.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(n, w * WORD).T.astype(bool)
+
+
+def sweep_rows_ref(nb, vm, F0, sentinel: int):
+    """Pure-jnp packed sweep: (n, kmax) gather table + validity mask and a
+    (n, bw) seed frontier -> (bw*32, n) int32 hop distances.
+
+    The jittable oracle for the Pallas kernel (and the `vmap`-able device
+    fallback the replica-sharded polish uses when the Pallas path is off).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    kmax = nb.shape[1]
+    bw = F0.shape[1]
+    dist0 = jnp.where(_unpack_bits(F0, jnp), 0, sentinel).astype(jnp.int32)
+
+    def cond(st):
+        return st[4]
+
+    def body(st):
+        d, F, V, dist, _ = st
+        N = jnp.zeros_like(F)
+        for j in range(kmax):  # static unroll: kmax = max degree, small
+            N = N | (jnp.take(F, nb[:, j], axis=0) & vm[:, j : j + 1])
+        newF = N & ~V
+        d = d + 1
+        dist = jnp.where(_unpack_bits(newF, jnp), d, dist)
+        return (d, newF, V | newF, dist, jnp.any(newF != jnp.uint32(0)))
+
+    st = (jnp.int32(0), F0, F0, dist0, jnp.any(F0 != jnp.uint32(0)))
+    return jax.lax.while_loop(cond, body, st)[3]
+
+
+def _kernel(nb_ref, vm_ref, f0_ref, dist_ref, *, sentinel):
+    # one grid cell = one (graph, source word-block) pair, state in VMEM
+    dist_ref[0] = sweep_rows_ref(nb_ref[0], vm_ref[0], f0_ref[0], sentinel)
+
+
+def _pallas_sweep(b: int, n: int, kmax: int, sw_pad: int, bw: int,
+                  sentinel: int, interpret: bool):
+    """Compiled batched sweep for (b, n, kmax)/(b, n, sw_pad) inputs."""
+    import jax
+    from jax.experimental import pallas as pl
+
+    key = ("pallas", b, n, kmax, sw_pad, bw, sentinel, interpret)
+    fn = _CACHE.get(key)
+    if fn is not None:
+        return fn
+    kernel = functools.partial(_kernel, sentinel=sentinel)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(b, sw_pad // bw),
+        in_specs=[
+            pl.BlockSpec((1, n, kmax), lambda r, i: (r, 0, 0)),
+            pl.BlockSpec((1, n, kmax), lambda r, i: (r, 0, 0)),
+            pl.BlockSpec((1, n, bw), lambda r, i: (r, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bw * WORD, n), lambda r, i: (r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sw_pad * WORD, n), jax.numpy.int32),
+        interpret=interpret,
+    )
+    fn = jax.jit(fn)
+    _CACHE[key] = fn
+    return fn
+
+
+def pack_batch(
+    nbrs: np.ndarray,
+    sources: np.ndarray,
+    block_words: int = BLOCK_WORDS,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, int]:
+    """Pack a (b, n, kmax) neighbour-table stack for the batched sweep.
+
+    The one place the word/pad contract lives: returns
+    ``(nb, vm, F0, sw_pad, bw)`` with ``sw_pad`` a multiple of the block
+    width ``bw``, shared by the single-graph, batched and sharded entry
+    points so their layouts can never drift apart.
+    """
+    b, n, kmax = nbrs.shape
+    m = len(sources)
+    sw = max(1, (m + WORD - 1) // WORD)
+    bw = min(block_words, sw)
+    sw_pad = -(-sw // bw) * bw
+    nb = np.empty((b, n, kmax), dtype=np.int32)
+    vm = np.empty((b, n, kmax), dtype=np.uint32)
+    for r in range(b):
+        nb[r], vm[r] = pack_nbr(nbrs[r])
+    F0 = np.ascontiguousarray(np.broadcast_to(
+        pack_frontier(n, sources, sw_pad), (b, n, sw_pad)))
+    return nb, vm, F0, sw_pad, bw
+
+
+def bfs_rows_batched(
+    nbrs: np.ndarray,
+    sources: np.ndarray,
+    sentinel: int,
+    interpret: bool = True,
+    block_words: int = BLOCK_WORDS,
+):
+    """Batched device BFS: (b, n, kmax) neighbour tables -> (b, m, n) int32.
+
+    All graphs share the same ``sources`` (the representative rows of the
+    symmetric polish tier).  Returns a jax array; callers slice/convert.
+    """
+    b, n, kmax = nbrs.shape
+    m = len(sources)
+    nb, vm, F0, sw_pad, bw = pack_batch(nbrs, sources, block_words)
+    out = _pallas_sweep(b, n, kmax, sw_pad, bw, sentinel, interpret)(nb, vm, F0)
+    return out[:, :m, :]
+
+
+def bfs_rows(
+    nbr: np.ndarray,
+    sources: np.ndarray,
+    sentinel: int,
+    interpret: bool = True,
+    block_words: int = BLOCK_WORDS,
+) -> np.ndarray:
+    """Hop distances from ``sources`` via the Pallas packed sweep, as a
+    (len(sources), n) int32 numpy array — the drop-in device twin of
+    ``repro.core.metrics.bitset_bfs_rows`` (bit-identical, sentinel
+    included; any source count works, tail bits simply stay zero)."""
+    m = len(sources)
+    n = nbr.shape[0]
+    if m == 0:
+        return np.full((0, n), sentinel, dtype=np.int32)
+    out = bfs_rows_batched(nbr[None], np.asarray(sources), sentinel,
+                           interpret=interpret, block_words=block_words)
+    return np.asarray(out[0])

@@ -334,9 +334,10 @@ def test_bitset_c_and_numpy_sweeps_identical():
 @given(st.sampled_from([(12, 3), (16, 4), (24, 4), (24, 6)]),
        st.integers(0, 10_000))
 def test_orbit_bitset_engine_matches_other_engines(shape, swap_seed):
-    """SymmetricAPSP engine='bitset' prices orbit swaps bit-identically to
-    the dense-numpy engine (and the C engine when available), with identical
-    delta/full counters, through commits and disconnections alike."""
+    """Every registered engine — dense numpy, bitset, the Pallas device
+    sweep (interpret mode) and the C kernel when available — prices orbit
+    swaps bit-identically, with identical delta/full counters, through
+    commits and disconnections alike."""
     s, fold = shape
     n = s * fold
     rng = np.random.default_rng(swap_seed)
@@ -344,7 +345,8 @@ def test_orbit_bitset_engine_matches_other_engines(shape, swap_seed):
     adj = circulant(n, offs).adjacency()
     from repro.core import _fastpath
 
-    engines = ["numpy", "bitset"] + (["c"] if _fastpath.get_lib() is not None else [])
+    engines = ["numpy", "bitset", "pallas"] \
+        + (["c"] if _fastpath.get_lib() is not None else [])
     evs = {e: metrics.SymmetricAPSP(adj.copy(), shift=s, engine=e) for e in engines}
     for _ in range(6):
         swap = _random_orbit_swap(evs["numpy"], rng)
@@ -369,6 +371,49 @@ def test_symmetric_engine_validation():
         metrics.SymmetricAPSP(adj, shift=6, engine="bogus")
     ev = metrics.SymmetricAPSP(adj, shift=6, engine="bitset")
     assert ev.engine == "bitset" and ev.fast is None and ev.a32 is None
+
+
+def test_engine_registry_is_the_single_validation_point():
+    """core.engines owns names, capabilities and availability probes."""
+    from repro.core import engines
+
+    assert engines.ROWS_ENGINES == ("c", "numpy", "bitset", "pallas")
+    assert metrics.SymmetricAPSP.ENGINES == engines.ROWS_ENGINES
+    # numpy/bitset have no external dependency and are always available
+    assert {"numpy", "bitset"} <= set(engines.available_engines())
+    with pytest.raises(ValueError, match="engine"):
+        engines.get_engine("bogus")
+    eng = engines.resolve_rows(None, use_c=False)
+    assert eng.name == "numpy" and eng.needs_dense_mirror and not eng.uses_nbr
+    assert engines.resolve_rows("bitset").uses_nbr
+    with pytest.raises(ValueError, match="engine"):
+        engines.resolve_circulant("bogus", 64)
+    assert engines.resolve_circulant("auto", 64) == "numpy"
+    # out-of-tree engines registered at runtime resolve like the built-ins
+    class _Probe(engines.Engine):
+        name = "probe-test"
+
+    engines.register(_Probe())
+    try:
+        assert "probe-test" in engines.ROWS_ENGINES
+        assert metrics.SymmetricAPSP.ENGINES == engines.ROWS_ENGINES  # live view
+        assert engines.get_engine("probe-test").name == "probe-test"
+    finally:  # keep the process-wide registry clean for other tests
+        engines._REGISTRY.pop("probe-test")
+        engines.ROWS_ENGINES = tuple(
+            nm for nm in engines.ROWS_ENGINES if nm != "probe-test")
+
+
+def test_engine_env_override(monkeypatch):
+    """REPRO_ENGINE forces the auto resolution (the CI engine-matrix knob);
+    an explicit engine= still wins."""
+    adj = circulant(24, [1, 5]).adjacency()
+    monkeypatch.setenv("REPRO_ENGINE", "bitset")
+    assert metrics.SymmetricAPSP(adj.copy(), shift=6).engine == "bitset"
+    assert metrics.SymmetricAPSP(adj.copy(), shift=6, engine="numpy").engine == "numpy"
+    monkeypatch.setenv("REPRO_ENGINE", "bogus")
+    with pytest.raises(ValueError, match="engine"):
+        metrics.SymmetricAPSP(adj.copy(), shift=6)
 
 
 def test_symmetric_evaluator_rejects_asymmetric_input():
@@ -407,6 +452,61 @@ def test_orbit_disconnecting_swap_reports_inf_and_recovers():
     ev.commit(tok2)
     ev.verify()
     assert ev.connected
+
+
+# ------------------------------------------------------------------------------
+# Pallas device sweep (engine="pallas", interpret mode on CPU)
+# ------------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 70), st.sampled_from([3, 4, 6]), st.integers(0, 10_000))
+def test_pallas_rows_match_bitset_sweep(n, k, seed):
+    """The Pallas packed sweep (32-bit words, VMEM level loop) is
+    bit-identical to the host uint64 bitset sweep on random regular graphs —
+    full and subset source sets, counts not divisible by the word width."""
+    pytest.importorskip("jax")
+    from repro.kernels import bfs_sweep
+
+    if n * k % 2 or n <= k:
+        n, k = 23, 4  # deliberately not divisible by the 32-bit word width
+    try:
+        g = random_hamiltonian_regular(n, k, seed=seed)
+    except RuntimeError:
+        return
+    nbr = metrics._nbr_table(g.adjacency())
+    ref = metrics.bitset_bfs_rows(nbr, np.arange(n), n)
+    assert np.array_equal(bfs_sweep.bfs_rows(nbr, np.arange(n), n), ref)
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, n))
+    srcs = rng.choice(n, size=m, replace=False)
+    assert np.array_equal(bfs_sweep.bfs_rows(nbr, srcs, n), ref[srcs])
+
+
+def test_pallas_rows_disconnected_and_sentinel():
+    """Disconnected components hold the sentinel, for any sentinel value —
+    same contract as the host bitset sweep."""
+    pytest.importorskip("jax")
+    from repro.kernels import bfs_sweep
+
+    edges = [(i, (i + 1) % 5) for i in range(5)] + \
+            [(5 + i, 5 + (i + 1) % 5) for i in range(5)]
+    nbr = metrics._nbr_table(from_edges(10, edges).adjacency())
+    ref = metrics.bitset_bfs_rows(nbr, np.arange(10), 99)
+    got = bfs_sweep.bfs_rows(nbr, np.arange(10), 99)
+    assert np.array_equal(got, ref)
+    assert (got == 99).sum() == 50  # 2 components of 5: half the pairs
+
+
+def test_pallas_engine_empty_sources_and_blocks():
+    """Zero sources short-circuit; source counts spanning multiple word
+    blocks (> 128) slice back to exactly m rows."""
+    pytest.importorskip("jax")
+    from repro.kernels import bfs_sweep
+
+    nbr = metrics._nbr_table(circulant(150, [1, 7]).adjacency())
+    assert bfs_sweep.bfs_rows(nbr, np.arange(0), 150).shape == (0, 150)
+    ref = metrics.bitset_bfs_rows(nbr, np.arange(150), 150)
+    assert np.array_equal(bfs_sweep.bfs_rows(nbr, np.arange(150), 150), ref)
 
 
 def test_swap_token_diameter_deferred_then_committed():

@@ -85,3 +85,61 @@ def test_model_paths_match_with_pallas():
         l0, _ = m0.loss(params, batch)
         l1, _ = m1.loss(params, batch)
         assert abs(float(l0) - float(l1)) < 5e-3, arch
+
+
+# ------------------------------------------------------------------------------
+# Word-packed BFS frontier sweep (kernels.bfs_sweep)
+# ------------------------------------------------------------------------------
+
+def test_bfs_sweep_kernel_matches_jnp_oracle():
+    """The Pallas kernel and its pure-jnp twin (sweep_rows_ref) agree
+    bit-exactly, including the word packing helpers."""
+    from repro.core import metrics
+    from repro.core.graphs import circulant
+    from repro.kernels import bfs_sweep
+
+    for n, offs, m in [(96, [1, 7], 96), (130, [2, 9, 31], 37), (64, [1, 5], 64)]:
+        nbr = metrics._nbr_table(circulant(n, offs).adjacency())
+        srcs = np.arange(m)
+        sw_pad = max(1, -(-m // bfs_sweep.WORD))
+        nb, vm = bfs_sweep.pack_nbr(nbr)
+        F0 = bfs_sweep.pack_frontier(n, srcs, sw_pad)
+        oracle = np.asarray(jax.jit(bfs_sweep.sweep_rows_ref, static_argnums=3)(
+            nb, vm, F0, n))[:m]
+        got = bfs_sweep.bfs_rows(nbr, srcs, n)
+        assert np.array_equal(got, oracle)
+        assert np.array_equal(got, metrics.bitset_bfs_rows(nbr, srcs, n))
+
+
+def test_bfs_sweep_batched_stack():
+    """The batched grid (replica axis) prices each stacked graph exactly as
+    the single-graph path does."""
+    from repro.core import metrics
+    from repro.core.graphs import circulant
+    from repro.kernels import bfs_sweep
+
+    n, m = 60, 15
+    nbrs = np.stack([metrics._nbr_table(circulant(n, offs).adjacency())
+                     for offs in ([1, 7], [1, 11], [2, 9])])
+    out = np.asarray(bfs_sweep.bfs_rows_batched(nbrs, np.arange(m), n))
+    for r in range(3):
+        assert np.array_equal(out[r], bfs_sweep.bfs_rows(nbrs[r], np.arange(m), n))
+
+
+def test_sharded_rows_totals_match_host():
+    """The shard_map-batched (total, max) pricing equals host BFS sums, on
+    both the Pallas and jnp device paths."""
+    from repro.core import metrics
+    from repro.core.engines import pallas_sweep
+    from repro.core.graphs import circulant
+
+    n, m = 60, 15
+    nbrs = np.stack([metrics._nbr_table(circulant(n, offs).adjacency())
+                     for offs in ([1, 7], [1, 11])])
+    want = np.stack([metrics.bitset_bfs_rows(nbrs[r], np.arange(m), n)
+                     for r in range(2)])
+    for use_pallas in (True, False):
+        tot, mx = pallas_sweep.sharded_rows_totals(nbrs, m, n,
+                                                   use_pallas=use_pallas)
+        assert np.array_equal(tot, want.sum((1, 2), dtype=np.int64)), use_pallas
+        assert np.array_equal(mx, want.max((1, 2))), use_pallas

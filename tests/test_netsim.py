@@ -83,3 +83,25 @@ def test_communication_heavy_kernels_differ_more_than_lu(topos16):
             for k in ("is", "ft", "lu")}
     assert gain["is"] > gain["lu"]
     assert gain["ft"] > gain["lu"]
+
+
+def test_routing_cache_keyed_on_graph():
+    """The routing table is cached at module level keyed on the graph, not
+    smuggled onto the frozen dataclass: two Cluster instances over the same
+    graph share one table, dataclasses.replace stays coherent, and the
+    frozen contract holds (no hidden instance attribute)."""
+    import dataclasses
+
+    g = graphs.ring(12)
+    a, b = netsim.Cluster(graph=g), netsim.Cluster(graph=g)
+    assert a.routing() is b.routing()
+    assert not hasattr(a, "_rt")
+    # a different graph gets its own table; swapping via replace follows it
+    h = graphs.wagner(12)
+    c = dataclasses.replace(a, graph=h)
+    assert c.routing() is not a.routing()
+    assert np.array_equal(c.routing().dist, netsim.RoutingTable.build(h).dist)
+    # the cache is bounded: filling past the cap evicts, never grows forever
+    for i in range(netsim._ROUTING_CACHE_MAX + 8):
+        netsim.Cluster(graph=graphs.ring(8 + 2 * (i % 40))).routing()
+    assert len(netsim._ROUTING_CACHE) <= netsim._ROUTING_CACHE_MAX

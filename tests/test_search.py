@@ -177,6 +177,94 @@ def test_symmetric_sa_engine_validation():
                                    engine="bogus")
 
 
+def test_symmetric_sa_pallas_engine_matches_dense_trajectory():
+    """Acceptance gate: the Pallas device sweep (interpret mode) follows the
+    exact per-seed trajectory of the seed dense-BFS pricing."""
+    a = search.symmetric_sa_search(48, 4, seed=0, n_iter=150, fold=4,
+                                   engine="pallas")
+    b = search.symmetric_sa_search(48, 4, seed=0, n_iter=150, fold=4,
+                                   incremental=False)
+    assert a.graph.edges == b.graph.edges
+    assert a.mpl == b.mpl and a.diameter == b.diameter
+    assert a.accepted == b.accepted and a.history == b.history
+    assert a.evals_delta + a.evals_full > 0
+
+
+def test_symmetric_sa_moves_per_step_default_unchanged():
+    """moves_per_step=1 (the default) must leave the classic trajectory
+    byte-identical — the compound machinery consumes no extra PRNG."""
+    for seed in (0, 3):
+        a = search.symmetric_sa_search(48, 4, seed=seed, n_iter=200, fold=4)
+        b = search.symmetric_sa_search(48, 4, seed=seed, n_iter=200, fold=4,
+                                       moves_per_step=1)
+        assert a.graph.edges == b.graph.edges
+        assert a.mpl == b.mpl and a.history == b.history
+        assert a.accepted == b.accepted
+        assert a.compound_steps == b.compound_steps == 0
+    with pytest.raises(ValueError, match="moves_per_step"):
+        search.symmetric_sa_search(16, 4, seed=0, n_iter=10, fold=4,
+                                   moves_per_step=0)
+
+
+def test_symmetric_sa_compound_moves_near_convergence():
+    """With a cold schedule from a polished warm start the single-move
+    accept rate collapses, the gate opens, and compound 2-orbit proposals
+    are priced — deterministically, preserving regularity and symmetry."""
+    kw = dict(n_iter=800, fold=4, t_start=1e-6, t_end=1e-9,
+              start_offsets=(1, 9, 23), moves_per_step=3)
+    a = search.symmetric_sa_search(64, 6, seed=0, **kw)
+    b = search.symmetric_sa_search(64, 6, seed=0, **kw)
+    assert a.compound_steps > 0  # the accept-rate gate actually opened
+    assert a.graph.edges == b.graph.edges and a.mpl == b.mpl
+    assert a.graph.is_regular() and a.graph.degree() == 6
+    s = 64 // 4
+    es = set(a.graph.edges)
+    for (u, v) in es:
+        p, q = (u + s) % 64, (v + s) % 64
+        assert (min(p, q), max(p, q)) in es  # rotational symmetry survived
+
+
+def test_large_search_replica_polish_deterministic_and_never_degrades():
+    """The device-sharded replica polish (shard_map over the replica axis)
+    is bit-reproducible per seed and never returns worse than the circulant
+    stage it warm-starts from."""
+    kw = dict(budget=15, fold=4, replicas=2, exchange_every=10)
+    r1 = search.large_search(64, 4, seed=0, **kw)
+    r2 = search.large_search(64, 4, seed=0, **kw)
+    assert r1.graph.edges == r2.graph.edges
+    assert r1.mpl == r2.mpl and r1.diameter == r2.diameter
+    assert r1.graph.n == 64 and r1.graph.degree() == 4
+    base = search.large_search(64, 4, seed=0, budget=15, fold=4, polish=False)
+    assert (r1.mpl, r1.diameter) <= (base.mpl, base.diameter)
+    assert r1.replicas in (1, 2)  # circulant stage may win outright
+
+
+def test_replica_polish_pallas_and_jnp_device_paths_identical():
+    """engine='pallas' routes the sharded pricing through the Pallas VMEM
+    kernel, every other engine through its jitted jnp twin — exact integer
+    hop counts both ways, so the replica trajectories are bit-identical."""
+    kw = dict(budget=10, fold=4, replicas=2, exchange_every=10)
+    a = search.large_search(48, 4, seed=0, engine="pallas", **kw)
+    b = search.large_search(48, 4, seed=0, engine="bitset", **kw)
+    assert a.graph.edges == b.graph.edges
+    assert a.mpl == b.mpl and a.accepted == b.accepted
+
+
+def test_replica_polish_multi_device_invariant(devices8):
+    """Sharding the replica axis over real (forced-host) devices changes
+    the placement, never the math: 4 devices reproduce the 1-device run."""
+    res = search.large_search(48, 4, seed=0, budget=10, fold=4, replicas=4,
+                              exchange_every=10)
+    out = devices8("""
+        from repro.core import search
+        res = search.large_search(48, 4, seed=0, budget=10, fold=4, replicas=4,
+                                  exchange_every=10)
+        print(res.mpl, res.diameter, res.accepted, hash(res.graph.edges))
+    """, n_devices=4)
+    assert out.strip() == \
+        f"{res.mpl} {res.diameter} {res.accepted} {hash(res.graph.edges)}"
+
+
 def test_circulant_jax_engine_matches_numpy_trajectory():
     """The jitted JAX batch pricer follows the numpy hillclimb trajectory
     exactly (same accepted offsets, same iteration count, same history)."""
