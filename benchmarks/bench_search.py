@@ -3,16 +3,22 @@
 Measures the rebuilt parallel-replica incremental engine against a faithful
 re-implementation of the seed's full-recompute SA loop (BFS from every vertex
 per proposal), at equal iteration count, and times the large-N circulant
-tier.  Emits the usual CSV rows AND a machine-readable
-``results/benchmarks/BENCH_search.json`` so CI can track the perf trajectory:
+tier.  Every timed search runs through the declarative `repro.api` pipeline:
+the row's exact `SearchSpec` is embedded (JSON) in the emitted artifact's
+``spec`` field, so any row can be replayed with
+``api.search(SearchSpec.from_json(row["spec"]))``.  Emits the usual CSV rows
+AND a machine-readable ``results/benchmarks/BENCH_search.json`` so CI can
+track the perf trajectory:
 
     {"machine": {...}, "results": [
         {"name": "sa_n64_k4", "engine_s": ..., "seed_s": ..., "speedup": ...,
-         "engine_mpl": ..., "seed_mpl": ..., "mpl_lb": ..., "gap_pct": ...},
-        {"name": "circulant_n512_k6", "wall_s": ..., "mpl": ..., "gap_pct": ...},
+         "engine_mpl": ..., "seed_mpl": ..., "mpl_lb": ..., "gap_pct": ...,
+         "spec": {...}},
+        {"name": "circulant_n512_k6", "wall_s": ..., "mpl": ..., "gap_pct": ...,
+         "spec": {...}},
         {"name": "polish_n2048_k6", "fold": ..., "engine_s": ..., "seed_s": ...,
          "speedup": ..., "engine_mpl": ..., "mpl": ..., "mpl_lb": ...,
-         "gap_pct": ...},
+         "gap_pct": ..., "spec": {...}},
         ...]}
 
 ``polish_*`` rows time the symmetry-aware incremental orbit SA
@@ -34,10 +40,17 @@ import time
 
 import numpy as np
 
-from . import common
-from repro.core import metrics, search
+from repro import api
+from repro.api import SearchSpec
+from repro.core import metrics
 from repro.core.graphs import random_hamiltonian_regular, ring
 from repro.core.known_optimal import KNOWN_CIRCULANT_OFFSETS
+
+from . import common
+
+
+def _spec_dict(spec: SearchSpec) -> dict:
+    return json.loads(spec.to_json())
 
 
 # ------------------------------------------------------------------------------
@@ -110,14 +123,19 @@ def run(smoke: bool = False) -> common.Rows:
     # warm the optional C kernel (first use compiles it — keep that out of
     # the timed regions) and prime numpy/BLAS
     has_c = metrics.IncrementalAPSP(ring(8).adjacency()).fast is not None
-    search.sa_search(12, 3, seed=0, n_iter=20)
+    api.search(SearchSpec.make(12, 3, strategy="sa", budget=20, replicas=1,
+                               target_mpl=None))
 
     # --- SA engine vs seed full-recompute, equal iteration count -----------
+    # replicas=1 + target_mpl=None pin the single-chain, no-early-stop
+    # trajectory the seed baseline walks, so the row isolates the evaluator
     n_iter = 1000 if smoke else 4000
     for (n, k) in ([(32, 4)] if smoke else [(32, 4), (64, 4)]):
         lb = metrics.mpl_lower_bound(n, k)
+        spec = SearchSpec.make(n, k, seed=0, strategy="sa", budget=n_iter,
+                               replicas=1, target_mpl=None)
         t0 = time.perf_counter()
-        res = search.sa_search(n, k, seed=0, n_iter=n_iter)
+        res = api.search(spec)
         engine_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         seed_mpl, _ = _seed_sa_search(n, k, seed=0, n_iter=n_iter)
@@ -134,13 +152,16 @@ def run(smoke: bool = False) -> common.Rows:
             "engine_mpl": res.mpl, "seed_mpl": seed_mpl, "mpl_lb": lb,
             "gap_pct": round((res.mpl / lb - 1) * 100, 2),
             "evals_delta": res.evals_delta, "evals_full": res.evals_full,
+            "spec": _spec_dict(spec),
         })
 
     # --- replica scaling: quality at fixed schedule -------------------------
     if not smoke:
         for r in (1, 4):
+            spec = SearchSpec.make(64, 4, seed=0, strategy="sa", budget=4000,
+                                   replicas=r, target_mpl=None)
             t0 = time.perf_counter()
-            res = search.sa_search(64, 4, seed=0, n_iter=4000, replicas=r)
+            res = api.search(spec)
             dt = time.perf_counter() - t0
             lb = metrics.mpl_lower_bound(64, 4)
             rows.add(f"sa_replicas{r}_n64", dt,
@@ -149,14 +170,16 @@ def run(smoke: bool = False) -> common.Rows:
                 "name": f"sa_replicas{r}_n64", "n": 64, "k": 4, "replicas": r,
                 "wall_s": round(dt, 4), "mpl": res.mpl, "mpl_lb": lb,
                 "gap_pct": round((res.mpl / lb - 1) * 100, 2),
+                "spec": _spec_dict(spec),
             })
 
     # --- large-N circulant tier ---------------------------------------------
     cases = [(256, 6, 200)] if smoke else [(256, 4, 400), (512, 6, 400), (1024, 8, 400)]
     for (n, k, iters) in cases:
         lb = metrics.mpl_lower_bound(n, k)
+        spec = SearchSpec.make(n, k, seed=0, strategy="circulant", budget=iters)
         t0 = time.perf_counter()
-        res = search.circulant_search(n, k, seed=0, n_iter=iters)
+        res = api.search(spec)
         dt = time.perf_counter() - t0
         rows.add(f"circulant_n{n}_k{k}", dt,
                  f"mpl={res.mpl:.4f} lb={lb:.4f} gap={(res.mpl / lb - 1) * 100:.1f}% "
@@ -166,6 +189,7 @@ def run(smoke: bool = False) -> common.Rows:
             "wall_s": round(dt, 4), "mpl": res.mpl, "mpl_lb": lb,
             "gap_pct": round((res.mpl / lb - 1) * 100, 2),
             "diameter": res.diameter, "offsets": list(res.offsets or ()),
+            "spec": _spec_dict(spec),
         })
 
     # --- large-N polish tier: incremental orbit SA vs seed dense-BFS orbit SA
@@ -183,15 +207,16 @@ def run(smoke: bool = False) -> common.Rows:
     for (n, k, fold, iters, engine) in polish_cases:
         lb = metrics.mpl_lower_bound(n, k)
         offs = KNOWN_CIRCULANT_OFFSETS[(n, k)]
-        orbits = search._circulant_orbits(n, n // fold, offs)
+        spec = SearchSpec.make(n, k, seed=0, strategy="symmetric-sa",
+                               budget=iters, fold=fold, engine=engine,
+                               start_offsets=list(offs), incremental=True)
         t0 = time.perf_counter()
-        res = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
-                                         start_orbits=orbits, incremental=True,
-                                         engine=engine)
+        res = api.search(spec)
         engine_s = time.perf_counter() - t0
+        seed_spec = spec.with_overrides(
+            engine=None, params={**spec.kwargs, "incremental": False})
         t0 = time.perf_counter()
-        res_seed = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
-                                              start_orbits=orbits, incremental=False)
+        res_seed = api.search(seed_spec)
         seed_s = time.perf_counter() - t0
         speedup = seed_s / engine_s if engine_s > 0 else float("inf")
         rows.add(f"polish_n{n}_k{k}", engine_s,
@@ -208,6 +233,7 @@ def run(smoke: bool = False) -> common.Rows:
             "mpl_lb": lb,
             "gap_pct": round((res.mpl / lb - 1) * 100, 2),
             "evals_delta": res.evals_delta, "evals_full": res.evals_full,
+            "spec": _spec_dict(spec),
         })
 
     # --- pallas device sweep vs the host bitset sweep at N=8192 --------------
@@ -220,14 +246,14 @@ def run(smoke: bool = False) -> common.Rows:
     for (n, k, fold, iters) in ([(8192, 8, 16, 4)] if smoke else [(8192, 8, 8, 6)]):
         lb = metrics.mpl_lower_bound(n, k)
         offs = KNOWN_CIRCULANT_OFFSETS[(n, k)]
-        orbits = search._circulant_orbits(n, n // fold, offs)
+        spec_p = SearchSpec.make(n, k, seed=0, strategy="symmetric-sa",
+                                 budget=iters, fold=fold, engine="pallas",
+                                 start_offsets=list(offs))
         t0 = time.perf_counter()
-        res_p = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
-                                           start_orbits=orbits, engine="pallas")
+        res_p = api.search(spec_p)
         pallas_s = time.perf_counter() - t0
         t0 = time.perf_counter()
-        res_b = search.symmetric_sa_search(n, k, seed=0, n_iter=iters, fold=fold,
-                                           start_orbits=orbits, engine="bitset")
+        res_b = api.search(spec_p.with_overrides(engine="bitset"))
         bitset_s = time.perf_counter() - t0
         assert res_p.mpl == res_b.mpl, "engine trajectories diverged"
         speedup = bitset_s / pallas_s if pallas_s > 0 else float("inf")
@@ -246,6 +272,7 @@ def run(smoke: bool = False) -> common.Rows:
             "engine_mpl": res_p.mpl, "mpl": res_b.mpl, "mpl_lb": lb,
             "gap_pct": round((res_p.mpl / lb - 1) * 100, 2),
             "evals_delta": res_p.evals_delta, "evals_full": res_p.evals_full,
+            "spec": _spec_dict(spec_p),
         })
 
     out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")

@@ -1,123 +1,94 @@
-"""Shared benchmark infrastructure: topology suites (with cached searches),
-ratio tables, CSV emission.
+"""Shared benchmark infrastructure: reporting rows + deprecated suite shims.
 
-Searches are seeded and cached under results/benchcache/ so `-m benchmarks.run`
-is fast on re-runs while remaining fully reproducible from scratch.
+The topology suites now live in the registry layer — `repro.api.paper_suite`
+returns the paper suites as name → `TopologySpec` dicts and
+`repro.api.build_topology(spec, cache_dir=...)` builds them with spec-keyed
+caching under results/benchcache/ (so `-m benchmarks.run` stays fast on
+re-runs while remaining fully reproducible from scratch).  The `suite16` /
+`suite32` / `suite256` / `suite_dragonfly` / `suite_large_dragonfly` /
+`optimal` / `suboptimal_sym` functions below are deprecation shims that
+delegate there and return byte-identical graphs per seed.
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
-import time
-
-import numpy as np
+import warnings
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
-from repro.core import graphs, metrics, netsim, search  # noqa: E402
-from repro.core.graphs import Graph, from_edges  # noqa: E402
+from repro import api  # noqa: E402
+from repro.core.graphs import Graph  # noqa: E402
 
+# Graph cache for the searched suite entries — written by the api facade as
+# spec_v<CACHE_VERSION>_<family>_<hash>.json with the spec embedded for
+# provenance (see repro.api.build_topology); stale v2_* files from the
+# pre-spec cached_graph era are simply unused.
 CACHE_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                          "results", "benchcache")
 
-# Bump whenever the search engine behind the cached builders changes, so a
-# pre-existing results/benchcache cannot silently serve stale graphs.
-CACHE_VERSION = 2
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"benchmarks.common.{old} is deprecated: use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
-def cached_graph(key: str, builder) -> Graph:
-    os.makedirs(CACHE_DIR, exist_ok=True)
-    fn = os.path.join(CACHE_DIR, f"v{CACHE_VERSION}_{key}.json")
-    if os.path.exists(fn):
-        with open(fn) as f:
-            d = json.load(f)
-        return from_edges(d["n"], [tuple(e) for e in d["edges"]], d["name"])
-    g = builder()
-    with open(fn, "w") as f:
-        json.dump({"n": g.n, "edges": [list(e) for e in g.edges], "name": g.name}, f)
-    return g
+def _suite_graphs(key: str) -> dict[str, Graph]:
+    return {name: api.build_topology(spec, cache_dir=CACHE_DIR)
+            for name, spec in api.paper_suite(key).items()}
 
 
 def optimal(n: int, k: int, seed: int = 0, budget: int = 5000, method=None) -> Graph:
-    return cached_graph(f"opt_{n}_{k}_{seed}",
-                        lambda: search.find_optimal(n, k, seed=seed, budget=budget,
-                                                    method=method))
+    _deprecated("optimal",
+                "api.build_topology(TopologySpec.make('optimal', n=..., k=...))")
+    spec = api.TopologySpec.make("optimal", n=n, k=k, budget=budget,
+                                 strategy=method or "auto", seed=seed)
+    return api.build_topology(spec, cache_dir=CACHE_DIR)
 
 
 def suboptimal_sym(n: int, k: int, seed: int = 0, n_iter: int = 1500, fold: int = 4) -> Graph:
-    """Large-N suboptimal graph: circulant warm start + orbit-SA polish
-    (falls back to the pure symmetric walk if the polish path degrades)."""
-
-    def build() -> Graph:
-        res = search.large_search(n, k, seed=seed, budget=max(400, n_iter // 3), fold=fold)
-        sym = search.symmetric_sa_search(n, k, seed=seed, n_iter=n_iter, fold=fold)
-        return (res if (res.mpl, res.diameter) <= (sym.mpl, sym.diameter) else sym).graph
-
-    return cached_graph(f"subopt_{n}_{k}_{seed}_{n_iter}", build)
+    """Deprecated shim for the large-N two-stage suboptimal build — the
+    recipe itself moved to the 'suboptimal' topology family."""
+    _deprecated("suboptimal_sym",
+                "api.build_topology(TopologySpec.make('suboptimal', n=..., k=...))")
+    spec = api.TopologySpec.make("suboptimal", n=n, k=k, n_iter=n_iter,
+                                 fold=fold, seed=seed)
+    return api.build_topology(spec, cache_dir=CACHE_DIR)
 
 
 # ------------------------------------------------------------------------------
-# Topology suites (paper benchmark sets)
+# Topology suites — deprecated shims over repro.api.paper_suite
 # ------------------------------------------------------------------------------
 
 def suite16() -> dict[str, Graph]:
-    return {
-        "(16,2)-Ring": graphs.ring(16),
-        "(16,3)-Wagner": graphs.wagner(16),
-        "(16,3)-Bidiakis": graphs.bidiakis(16),
-        "(16,3)-Optimal": optimal(16, 3),
-        "(16,4)-Torus": graphs.torus([4, 4]),
-        "(16,4)-Optimal": optimal(16, 4),
-    }
+    _deprecated("suite16", "api.paper_suite('16') + api.build_topology")
+    return _suite_graphs("16")
 
 
 def suite32() -> dict[str, Graph]:
-    return {
-        "(32,2)-Ring": graphs.ring(32),
-        "(32,3)-Wagner": graphs.wagner(32),
-        "(32,3)-Bidiakis": graphs.bidiakis(32),
-        "(32,3)-Optimal": optimal(32, 3, budget=6000),
-        "(32,4)-Torus": graphs.torus([4, 8]),
-        "(32,4)-Chvatal": graphs.chvatal32(),
-        "(32,4)-Optimal": optimal(32, 4, budget=6000),
-    }
+    _deprecated("suite32", "api.paper_suite('32') + api.build_topology")
+    return _suite_graphs("32")
 
 
 def suite_dragonfly() -> dict[str, tuple[Graph, Graph]]:
     """(optimal, dragonfly) pairs for TABLE 2/3."""
-    return {
-        "(20,4)": (optimal(20, 4), graphs.dragonfly(4, 5, 1)),
-        "(30,5)": (optimal(30, 5), graphs.dragonfly(5, 6, 1)),
-        "(36,5)": (optimal(36, 5), graphs.dragonfly(4, 9, 2)),
-    }
+    _deprecated("suite_dragonfly", "api.paper_suite('dragonfly')")
+    gs = _suite_graphs("dragonfly")
+    return {key: (gs[f"{key}-Optimal"], gs[f"{key}-Dragonfly"])
+            for key in ("(20,4)", "(30,5)", "(36,5)")}
 
 
 def suite256() -> dict[str, Graph]:
-    return {
-        "(256,2)-Ring": graphs.ring(256),
-        "(256,3)-Wagner": graphs.wagner(256),
-        "(256,3)-Bidiakis": graphs.bidiakis(256),
-        "(256,3)-Suboptimal": suboptimal_sym(256, 3),
-        "(256,4)-Torus": graphs.torus([16, 16]),
-        "(256,4)-Suboptimal": suboptimal_sym(256, 4),
-        "(256,6)-Torus": graphs.torus([4, 8, 8]),
-        "(256,6)-Suboptimal": suboptimal_sym(256, 6),
-        "(256,8)-Torus": graphs.torus([4, 4, 4, 4]),
-        "(256,8)-Suboptimal": suboptimal_sym(256, 8),
-    }
+    _deprecated("suite256", "api.paper_suite('256') + api.build_topology")
+    return _suite_graphs("256")
 
 
 def suite_large_dragonfly() -> dict[str, tuple[Graph, Graph]]:
-    return {
-        # perfect palmtree instances (g = a*h + 1 => regular): degree 11
-        "(252,11)": (cached_graph("opt_252_11",
-                                  lambda: search.circulant_search(252, 11, seed=0, n_iter=400).graph),
-                     graphs.dragonfly(9, 28, 3)),
-        "(264,11)": (cached_graph("opt_264_11",
-                                  lambda: search.circulant_search(264, 11, seed=0, n_iter=400).graph),
-                     graphs.dragonfly(8, 33, 4)),
-    }
+    _deprecated("suite_large_dragonfly", "api.paper_suite('large-dragonfly')")
+    gs = _suite_graphs("large-dragonfly")
+    return {key: (gs[f"{key}-Optimal"], gs[f"{key}-Dragonfly"])
+            for key in ("(252,11)", "(264,11)")}
 
 
 # ------------------------------------------------------------------------------
@@ -152,9 +123,3 @@ class Rows:
             name = self.bench + "_rows.json"
         with open(os.path.join(out, name), "w") as f:
             json.dump([{"name": n, "us": u, "derived": d} for n, u, d in self.rows], f, indent=1)
-
-
-def ratios_to_ring(times: dict[str, float], ring_key: str | None = None) -> dict[str, float]:
-    ring_key = ring_key or next(k for k in times if "Ring" in k)
-    t0 = times[ring_key]
-    return {k: t0 / v for k, v in times.items()}

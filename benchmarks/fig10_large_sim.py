@@ -1,36 +1,34 @@
 """Paper Fig 10: 256-node simulated Alltoall / b_eff / FFTE / Graph500-BFS /
 NPB IS+FT ratios to ring (SimGrid-reduced sizes: 64KB/512KB alltoall, scale-12
 BFS, classes S/A for IS).  Anchor: (256,8)-Subopt > 10x Wagner on alltoall."""
+from repro import api
+
 from . import common
-from repro.core import netsim
+
+WORKLOADS = (
+    [(f"alltoall-{sz_name}", "collective", {"op": "alltoall", "unit_bytes": sz})
+     for sz_name, sz in (("64KB", 64 << 10), ("512KB", 512 << 10))]
+    + [("beff", "beff", {"n_sizes": 5, "n_random": 2}),
+       ("ffte", "ffte", {"array_len": 1 << 21}),
+       ("g500-bfs", "graph500", {"scale": 12})]
+    + [(f"npb-{kern}-{klass}", "npb", {"kernel": kern, "klass": klass})
+       for kern, klass in (("is", "S"), ("is", "A"), ("ft", "A"))]
+)
 
 
 def run() -> common.Rows:
     rows = common.Rows("fig10")
-    suite = common.suite256()
-    clusters = {n: netsim.TAISHAN(g) for n, g in suite.items()}
-    for sz_name, sz in (("64KB", 64 << 10), ("512KB", 512 << 10)):
-        times = {n: netsim.collective_bench(cl, "alltoall", float(sz))
-                 for n, cl in clusters.items()}
-        ratios = common.ratios_to_ring(times)
-        for n in suite:
-            rows.add(f"alltoall-{sz_name}/{n}", times[n], f"ratio={ratios[n]:.2f}")
-    vals = {n: netsim.effective_bandwidth(cl, n_sizes=5, n_random=2)
-            for n, cl in clusters.items()}
-    ring = next(k for k in vals if "Ring" in k)
-    for n in suite:
-        rows.add(f"beff/{n}", 1.0 / vals[n], f"ratio={vals[n]/vals[ring]:.2f}")
-    times = {n: netsim.ffte_1d(cl, 1 << 21) for n, cl in clusters.items()}
-    ratios = common.ratios_to_ring(times)
-    for n in suite:
-        rows.add(f"ffte/{n}", times[n], f"ratio={ratios[n]:.2f}")
-    times = {n: netsim.graph500(cl, scale=12) for n, cl in clusters.items()}
-    ratios = common.ratios_to_ring(times)
-    for n in suite:
-        rows.add(f"g500-bfs/{n}", times[n], f"ratio={ratios[n]:.2f}")
-    for kern, klass in (("is", "S"), ("is", "A"), ("ft", "A")):
-        times = {n: netsim.npb(cl, kern, klass) for n, cl in clusters.items()}
-        ratios = common.ratios_to_ring(times)
-        for n in suite:
-            rows.add(f"npb-{kern}-{klass}/{n}", times[n], f"ratio={ratios[n]:.2f}")
+    exp = api.run_experiment(api.paper_suite("256"), workloads=WORKLOADS,
+                             cache_dir=common.CACHE_DIR)
+    ring = next(n for n in exp.names if "Ring" in n)
+    for wkey, _, _ in WORKLOADS:
+        if wkey == "beff":  # bandwidth: higher is better, ratio inverts
+            vals = {n: exp.values[n][wkey] for n in exp.names}
+            for n in exp.names:
+                rows.add(f"beff/{n}", 1.0 / vals[n],
+                         f"ratio={vals[n]/vals[ring]:.2f}")
+            continue
+        ratios = exp.ratios(wkey)
+        for n in exp.names:
+            rows.add(f"{wkey}/{n}", exp.values[n][wkey], f"ratio={ratios[n]:.2f}")
     return rows

@@ -1,17 +1,20 @@
 """Paper Fig 2: node-to-node ping-pong latency vs hop distance — linear fit
-T = T0 + a*h with Pearson rho (paper: rho >= 0.977, avg fit 107.17+121.15h us)."""
-import time
+T = T0 + a*h with Pearson rho (paper: rho >= 0.977, avg fit 107.17+121.15h us).
+Topologies come from the declarative suite specs and are priced through the
+`repro.api` facade."""
+from repro import api
 
 from . import common
-from repro.core import netsim
 
 
 def run() -> common.Rows:
     rows = common.Rows("fig2")
-    for name, g in {**common.suite16(), **common.suite32()}.items():
-        cl = netsim.TAISHAN(g)
-        t0 = time.perf_counter()
-        T0, alpha, rho = netsim.pingpong_fit(cl, nbytes=1024)
-        dt = time.perf_counter() - t0
-        rows.add(name, dt, f"T={T0*1e6:.2f}+{alpha*1e6:.2f}h rho={rho:.4f}")
+    exp = api.run_experiment(
+        {**api.paper_suite("16"), **api.paper_suite("32")},
+        workloads=[("pingpong_fit", {"nbytes": 1024})],
+        cache_dir=common.CACHE_DIR)
+    for name in exp.names:
+        fit = exp.values[name]["pingpong_fit"]
+        rows.add(name, exp.seconds[name]["pingpong_fit"],
+                 f"T={fit['T0']*1e6:.2f}+{fit['alpha']*1e6:.2f}h rho={fit['rho']:.4f}")
     return rows

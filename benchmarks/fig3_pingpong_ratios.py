@@ -1,19 +1,19 @@
 """Paper Fig 3: mean ping-pong latency performance ratios to ring."""
-import time
+from repro import api
+from repro.core import metrics
 
 from . import common
-from repro.core import metrics, netsim
 
 
 def run() -> common.Rows:
     rows = common.Rows("fig3")
-    for suite in (common.suite16(), common.suite32()):
-        lat = {}
-        for name, g in suite.items():
-            t0 = time.perf_counter()
-            lat[name] = netsim.pingpong_mean_latency(netsim.TAISHAN(g))
-            dt = time.perf_counter() - t0
-        ratios = common.ratios_to_ring(lat)
-        for name, g in suite.items():
-            rows.add(name, lat[name], f"ratio={ratios[name]:.3f} MPL={metrics.mpl(g):.3f}")
+    for key in ("16", "32"):
+        exp = api.run_experiment(api.paper_suite(key),
+                                 workloads=["pingpong_mean"],
+                                 cache_dir=common.CACHE_DIR)
+        ratios = exp.ratios("pingpong_mean")
+        for name in exp.names:
+            rows.add(name, exp.values[name]["pingpong_mean"],
+                     f"ratio={ratios[name]:.3f} "
+                     f"MPL={metrics.mpl(exp.graphs[name]):.3f}")
     return rows

@@ -1,10 +1,9 @@
 """Paper Fig 4: MPI_Bcast / Reduce / Scatter / Alltoall ratios to ring at
 1 MB and 32 MB unit messages (root-averaged for rooted collectives).
 Paper anchors: (16,4)-Opt alltoall 2.16/1.87; (32,4)-Opt 2.79/2.64."""
-import time
+from repro import api
 
 from . import common
-from repro.core import netsim
 
 OPS = ("bcast", "reduce", "scatter", "alltoall")
 SIZES = {"1MB": 1 << 20, "32MB": 32 << 20}
@@ -12,16 +11,14 @@ SIZES = {"1MB": 1 << 20, "32MB": 32 << 20}
 
 def run() -> common.Rows:
     rows = common.Rows("fig4")
-    for suite in (common.suite16(), common.suite32()):
-        clusters = {n: netsim.TAISHAN(g) for n, g in suite.items()}
-        for op in OPS:
-            for sz_name, sz in SIZES.items():
-                times = {}
-                for name, cl in clusters.items():
-                    t0 = time.perf_counter()
-                    times[name] = netsim.collective_bench(cl, op, float(sz))
-                ratios = common.ratios_to_ring(times)
-                for name in suite:
-                    rows.add(f"{op}-{sz_name}/{name}", times[name],
-                             f"ratio={ratios[name]:.3f}")
+    workloads = [(f"{op}-{sz_name}", "collective", {"op": op, "unit_bytes": sz})
+                 for op in OPS for sz_name, sz in SIZES.items()]
+    for key in ("16", "32"):
+        exp = api.run_experiment(api.paper_suite(key), workloads=workloads,
+                                 cache_dir=common.CACHE_DIR)
+        for wkey, _, _ in workloads:
+            ratios = exp.ratios(wkey)
+            for name in exp.names:
+                rows.add(f"{wkey}/{name}", exp.values[name][wkey],
+                         f"ratio={ratios[name]:.3f}")
     return rows

@@ -1,21 +1,18 @@
 """Paper Fig 5: effective bandwidth (b_eff) ratios to ring.
 Anchors: (16,4)-Opt 686.51 MB/s, (32,4)-Opt 1066.80 MB/s; +38%/+68% over Wagner."""
-import time
+from repro import api
 
 from . import common
-from repro.core import netsim
 
 
 def run() -> common.Rows:
     rows = common.Rows("fig5")
-    for suite in (common.suite16(), common.suite32()):
-        vals = {}
-        for name, g in suite.items():
-            t0 = time.perf_counter()
-            vals[name] = netsim.effective_bandwidth(netsim.TAISHAN(g))
-            dt = time.perf_counter() - t0
+    for key in ("16", "32"):
+        exp = api.run_experiment(api.paper_suite(key), workloads=["beff"],
+                                 cache_dir=common.CACHE_DIR)
+        vals = {name: exp.values[name]["beff"] for name in exp.names}
         ring = next(k for k in vals if "Ring" in k)
-        for name in suite:
+        for name in exp.names:
             rows.add(name, 1.0 / vals[name],
                      f"beff={vals[name]/1e6:.1f}MB/s ratio={vals[name]/vals[ring]:.3f}")
     return rows

@@ -1,20 +1,21 @@
 """Paper Fig 6: 1-D parallel FFTE ratios to ring at 2^21 and 2^27 points
 (32 MB / 2 GB arrays).  Anchors: (16,4)-Opt 1.85, (32,4)-Opt 2.31 at 2 GB."""
-import time
+from repro import api
 
 from . import common
-from repro.core import netsim
 
 LENS = {"32MB": 1 << 21, "2GB": 1 << 27}
 
 
 def run() -> common.Rows:
     rows = common.Rows("fig6")
-    for suite in (common.suite16(), common.suite32()):
-        clusters = {n: netsim.TAISHAN(g) for n, g in suite.items()}
-        for ln, n_pts in LENS.items():
-            times = {name: netsim.ffte_1d(cl, n_pts) for name, cl in clusters.items()}
-            ratios = common.ratios_to_ring(times)
-            for name in suite:
-                rows.add(f"{ln}/{name}", times[name], f"ratio={ratios[name]:.3f}")
+    workloads = [(ln, "ffte", {"array_len": n_pts}) for ln, n_pts in LENS.items()]
+    for key in ("16", "32"):
+        exp = api.run_experiment(api.paper_suite(key), workloads=workloads,
+                                 cache_dir=common.CACHE_DIR)
+        for ln in LENS:
+            ratios = exp.ratios(ln)
+            for name in exp.names:
+                rows.add(f"{ln}/{name}", exp.values[name][ln],
+                         f"ratio={ratios[name]:.3f}")
     return rows

@@ -1,16 +1,20 @@
 """Paper Fig 7: Graph500 BFS/SSSP ratios to ring (scale 27).
 Anchors: (16,4)-Opt 3.05/2.71; (32,4)-Opt 5.41/4.75."""
+from repro import api
+
 from . import common
-from repro.core import netsim
 
 
 def run() -> common.Rows:
     rows = common.Rows("fig7")
-    for suite in (common.suite16(), common.suite32()):
-        clusters = {n: netsim.TAISHAN(g) for n, g in suite.items()}
-        for op in ("bfs", "sssp"):
-            times = {name: netsim.graph500(cl, scale=27, op=op) for name, cl in clusters.items()}
-            ratios = common.ratios_to_ring(times)
-            for name in suite:
-                rows.add(f"{op}/{name}", times[name], f"ratio={ratios[name]:.3f}")
+    workloads = [(op, "graph500", {"scale": 27, "op": op})
+                 for op in ("bfs", "sssp")]
+    for key in ("16", "32"):
+        exp = api.run_experiment(api.paper_suite(key), workloads=workloads,
+                                 cache_dir=common.CACHE_DIR)
+        for op, _, _ in workloads:
+            ratios = exp.ratios(op)
+            for name in exp.names:
+                rows.add(f"{op}/{name}", exp.values[name][op],
+                         f"ratio={ratios[name]:.3f}")
     return rows

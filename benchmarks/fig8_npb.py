@@ -1,20 +1,22 @@
 """Paper Fig 8: NPB IS/CG/MG/FT/LU ratios to ring, classes A and C.
 Anchors: IS-C (16,4)-Opt 2.89, (32,4)-Opt 4.32; FT-C 1.66/2.35; LU ~uniform."""
+from repro import api
+
 from . import common
-from repro.core import netsim
 
 KERNELS = ("is", "cg", "mg", "ft", "lu")
 
 
 def run() -> common.Rows:
     rows = common.Rows("fig8")
-    for suite in (common.suite16(), common.suite32()):
-        clusters = {n: netsim.TAISHAN(g) for n, g in suite.items()}
-        for kern in KERNELS:
-            for klass in ("A", "C"):
-                times = {name: netsim.npb(cl, kern, klass) for name, cl in clusters.items()}
-                ratios = common.ratios_to_ring(times)
-                for name in suite:
-                    rows.add(f"{kern}-{klass}/{name}", times[name],
-                             f"ratio={ratios[name]:.3f}")
+    workloads = [(f"{kern}-{klass}", "npb", {"kernel": kern, "klass": klass})
+                 for kern in KERNELS for klass in ("A", "C")]
+    for key in ("16", "32"):
+        exp = api.run_experiment(api.paper_suite(key), workloads=workloads,
+                                 cache_dir=common.CACHE_DIR)
+        for wkey, _, _ in workloads:
+            ratios = exp.ratios(wkey)
+            for name in exp.names:
+                rows.add(f"{wkey}/{name}", exp.values[name][wkey],
+                         f"ratio={ratios[name]:.3f}")
     return rows

@@ -1,8 +1,10 @@
 """Paper TABLE 1: D / MPL / BW of the benchmarked low-radix topologies.
 Constructible rows are asserted exactly; searched rows report the reached
-values + the published targets."""
+values + the published targets.  Graphs are built exclusively from the
+declarative suite specs through `repro.api`."""
+from repro import api
+
 from . import common
-from repro.core import metrics
 
 PAPER = {  # name -> (D, MPL, BW)
     "(16,4)-Optimal": (3, 1.75, 12), "(16,4)-Torus": (4, 2.13, 8),
@@ -17,15 +19,15 @@ PAPER = {  # name -> (D, MPL, BW)
 
 def run() -> common.Rows:
     rows = common.Rows("table1")
-    topos = {**common.suite16(), **common.suite32()}
-    for name, g in topos.items():
-        import time
-        t0 = time.perf_counter()
-        s = metrics.stats(g, bw_restarts=24)
-        dt = time.perf_counter() - t0
+    exp = api.run_experiment(
+        {**api.paper_suite("16"), **api.paper_suite("32")},
+        workloads=[("stats", {"bw_restarts": 24})],
+        cache_dir=common.CACHE_DIR)
+    for name in exp.names:
+        s = exp.values[name]["stats"]
         pd, pm, pb = PAPER[name]
         ok = (s.diameter == pd) and (round(s.mpl, 2) == round(pm, 2)) and (s.bw == pb)
-        rows.add(name, dt,
+        rows.add(name, exp.seconds[name]["stats"],
                  f"D={s.diameter:.0f}/{pd} MPL={s.mpl:.4f}/{pm} BW={s.bw}/{pb} "
                  f"match={'Y' if ok else 'n'} gapMPL={s.mpl - s.mpl_lb:+.3f}")
     return rows

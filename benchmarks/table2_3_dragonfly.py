@@ -1,10 +1,9 @@
 """Paper TABLE 2+3: high-radix optimal vs Dragonfly at (20,4)/(30,5)/(36,5):
 graph properties + b_eff / Graph500 / Alltoall performance ratios
 (optimal over dragonfly).  Anchors: alltoall (30,5) 1.67/1.80."""
-import time
+from repro import api
 
 from . import common
-from repro.core import metrics, netsim
 
 PAPER_T2 = {  # name -> (D_opt, MPL_opt, D_df, MPL_df)
     "(20,4)": (3, 1.95, 3, 2.26),
@@ -12,28 +11,36 @@ PAPER_T2 = {  # name -> (D_opt, MPL_opt, D_df, MPL_df)
     "(36,5)": (3, 2.14, 3, 2.34),
 }
 
+WORKLOADS = (
+    [("stats", {"bw_restarts": 16}),
+     ("beff", {"n_sizes": 9, "n_random": 4})]
+    + [(f"g500-{op}", "graph500", {"scale": 20, "op": op})
+       for op in ("bfs", "sssp")]
+    + [(f"alltoall-{sz_name}", "collective",
+        {"op": "alltoall", "unit_bytes": sz})
+       for sz_name, sz in (("1MB", 1 << 20), ("32MB", 32 << 20))]
+)
+
 
 def run() -> common.Rows:
     rows = common.Rows("table2_3")
-    for key, (g_opt, g_df) in common.suite_dragonfly().items():
-        t0 = time.perf_counter()
-        so = metrics.stats(g_opt, bw_restarts=16)
-        sd = metrics.stats(g_df, bw_restarts=16)
-        dt = time.perf_counter() - t0
+    exp = api.run_experiment(api.paper_suite("dragonfly"), workloads=WORKLOADS,
+                             cache_dir=common.CACHE_DIR)
+    for key in PAPER_T2:
+        vo, vd = exp.values[f"{key}-Optimal"], exp.values[f"{key}-Dragonfly"]
+        so, sd = vo["stats"], vd["stats"]
+        dt = exp.seconds[f"{key}-Optimal"]["stats"] + \
+            exp.seconds[f"{key}-Dragonfly"]["stats"]
         pd = PAPER_T2[key]
         rows.add(f"props/{key}", dt,
                  f"opt D={so.diameter:.0f} MPL={so.mpl:.3f} BW={so.bw} | "
                  f"dfly D={sd.diameter:.0f} MPL={sd.mpl:.3f} BW={sd.bw} | "
                  f"paper opt(D={pd[0]},MPL={pd[1]}) dfly(D={pd[2]},MPL={pd[3]})")
-        co, cd = netsim.TAISHAN(g_opt), netsim.TAISHAN(g_df)
-        r_beff = netsim.effective_bandwidth(co, n_sizes=9, n_random=4) / \
-                 netsim.effective_bandwidth(cd, n_sizes=9, n_random=4)
-        rows.add(f"beff/{key}", 0.0, f"opt/dfly={r_beff:.3f}")
-        for op_name, scale in (("bfs", 20), ("sssp", 20)):
-            r = netsim.graph500(cd, scale=scale, op=op_name) / netsim.graph500(co, scale=scale, op=op_name)
+        rows.add(f"beff/{key}", 0.0, f"opt/dfly={vo['beff'] / vd['beff']:.3f}")
+        for op_name in ("bfs", "sssp"):
+            r = vd[f"g500-{op_name}"] / vo[f"g500-{op_name}"]
             rows.add(f"g500-{op_name}/{key}", 0.0, f"opt/dfly={r:.3f}")
-        for sz_name, sz in (("1MB", 1 << 20), ("32MB", 32 << 20)):
-            r = netsim.collective_bench(cd, "alltoall", float(sz)) / \
-                netsim.collective_bench(co, "alltoall", float(sz))
+        for sz_name in ("1MB", "32MB"):
+            r = vd[f"alltoall-{sz_name}"] / vo[f"alltoall-{sz_name}"]
             rows.add(f"alltoall-{sz_name}/{key}", 0.0, f"opt/dfly={r:.3f}")
     return rows

@@ -1,10 +1,11 @@
 """Paper TABLE 4: 256-node suboptimal vs torus/Wagner/Bidiakis/ring —
 D / MPL / BW and the gap to the Cerf lower bounds (paper: D gap <= 1,
-MPL gap <= 2%)."""
-import time
+MPL gap <= 2%).  The suboptimal rows are searched through the declarative
+spec pipeline (`repro.api.paper_suite('256')` → the 'suboptimal' family →
+`repro.api.search`)."""
+from repro import api
 
 from . import common
-from repro.core import metrics
 
 PAPER = {
     "(256,8)-Suboptimal": (3 + 1, 2.72 + 0.03, 298), "(256,8)-Torus": (8, 4.02, 128),
@@ -17,12 +18,13 @@ PAPER = {
 
 def run() -> common.Rows:
     rows = common.Rows("table4")
-    for name, g in common.suite256().items():
-        t0 = time.perf_counter()
-        s = metrics.stats(g, bw_restarts=8)
-        dt = time.perf_counter() - t0
+    exp = api.run_experiment(api.paper_suite("256"),
+                             workloads=[("stats", {"bw_restarts": 8})],
+                             cache_dir=common.CACHE_DIR)
+    for name in exp.names:
+        s = exp.values[name]["stats"]
         pd, pm, pb = PAPER[name]
-        rows.add(name, dt,
+        rows.add(name, exp.seconds[name]["stats"],
                  f"D={s.diameter:.0f} (paper {pd}) MPL={s.mpl:.4f} (paper {pm:.2f}) "
                  f"BW={s.bw} (paper {pb}) | gapD={s.diameter - s.d_lb:+.0f} "
                  f"gapMPL={(s.mpl / s.mpl_lb - 1) * 100:+.1f}%")

@@ -1,29 +1,35 @@
 """Paper TABLE 5+6: (252/264,11) optimal vs Dragonfly — properties + simulated
 b_eff / Graph500 / Alltoall ratios.  Anchors: alltoall (252,11) 1.92/2.57."""
-import time
+from repro import api
 
 from . import common
-from repro.core import metrics, netsim
+
+WORKLOADS = (
+    [("stats", {"bw_restarts": 4}),
+     ("beff", {"n_sizes": 5, "n_random": 2}),
+     ("g500-bfs", "graph500", {"scale": 12, "op": "bfs"})]
+    + [(f"alltoall-{sz_name}", "collective",
+        {"op": "alltoall", "unit_bytes": sz})
+       for sz_name, sz in (("64KB", 64 << 10), ("512KB", 512 << 10))]
+)
 
 
 def run() -> common.Rows:
     rows = common.Rows("table5_6")
-    for key, (g_opt, g_df) in common.suite_large_dragonfly().items():
-        t0 = time.perf_counter()
-        so = metrics.stats(g_opt, bw_restarts=4)
-        sd = metrics.stats(g_df, bw_restarts=4)
-        dt = time.perf_counter() - t0
+    exp = api.run_experiment(api.paper_suite("large-dragonfly"),
+                             workloads=WORKLOADS, cache_dir=common.CACHE_DIR)
+    for key in ("(252,11)", "(264,11)"):
+        vo, vd = exp.values[f"{key}-Optimal"], exp.values[f"{key}-Dragonfly"]
+        so, sd = vo["stats"], vd["stats"]
+        dt = exp.seconds[f"{key}-Optimal"]["stats"] + \
+            exp.seconds[f"{key}-Dragonfly"]["stats"]
         rows.add(f"props/{key}", dt,
                  f"opt D={so.diameter:.0f} MPL={so.mpl:.3f} BW={so.bw} | "
                  f"dfly D={sd.diameter:.0f} MPL={sd.mpl:.3f} BW={sd.bw}")
-        co, cd = netsim.TAISHAN(g_opt), netsim.TAISHAN(g_df)
-        r_beff = netsim.effective_bandwidth(co, n_sizes=5, n_random=2) / \
-                 netsim.effective_bandwidth(cd, n_sizes=5, n_random=2)
-        rows.add(f"beff/{key}", 0.0, f"opt/dfly={r_beff:.3f}")
-        r = netsim.graph500(cd, scale=12, op="bfs") / netsim.graph500(co, scale=12, op="bfs")
-        rows.add(f"g500-bfs/{key}", 0.0, f"opt/dfly={r:.3f}")
-        for sz_name, sz in (("64KB", 64 << 10), ("512KB", 512 << 10)):
-            r = netsim.collective_bench(cd, "alltoall", float(sz)) / \
-                netsim.collective_bench(co, "alltoall", float(sz))
+        rows.add(f"beff/{key}", 0.0, f"opt/dfly={vo['beff'] / vd['beff']:.3f}")
+        rows.add(f"g500-bfs/{key}", 0.0,
+                 f"opt/dfly={vd['g500-bfs'] / vo['g500-bfs']:.3f}")
+        for sz_name in ("64KB", "512KB"):
+            r = vd[f"alltoall-{sz_name}"] / vo[f"alltoall-{sz_name}"]
             rows.add(f"alltoall-{sz_name}/{key}", 0.0, f"opt/dfly={r:.3f}")
     return rows

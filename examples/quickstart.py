@@ -9,10 +9,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
-from repro.core import graphs, layout, metrics, netsim, search
+from repro import api
+from repro.core import graphs, layout, metrics, netsim
 
-# 1. Discover a minimal-MPL (16,4) regular graph (paper Algorithm 1).
-res = search.sa_search(16, 4, seed=0, n_iter=4000, target_mpl=1.75)
+# 1. Discover a minimal-MPL (16,4) regular graph (paper Algorithm 1) through
+#    the declarative search API: the spec names the tier, budget and seed.
+res = api.search(api.SearchSpec.make(16, 4, strategy="sa", budget=4000, seed=0))
 opt = res.graph
 print(f"found {opt.name}: MPL={res.mpl:.4f} (lower bound {res.mpl_lb:.4f}), "
       f"D={res.diameter:.0f}, {res.iterations} SA iterations")

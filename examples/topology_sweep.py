@@ -2,9 +2,15 @@
 several degrees, compare D/MPL/BW + predicted application performance against
 torus/ring, and report the MPL->performance correlation (paper Figs 3-10).
 
+The whole sweep is one `repro.api` experiment: the topology set is a dict of
+declarative `TopologySpec`s (the searched entries run through
+`api.search` under the hood), and the four application workloads are
+registry cells priced by `api.run_experiment`.
+
     PYTHONPATH=src python examples/topology_sweep.py --nodes 64
 """
 import argparse
+import math
 import os
 import sys
 
@@ -12,7 +18,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
 
 import numpy as np
 
-from repro.core import graphs, metrics, netsim, search
+from repro import api
+
+WORKLOADS = [
+    ("stats", {"bw_restarts": 8}),
+    ("a2a", "alltoall", {"unit_bytes": 1 << 20}),
+    ("beff", "beff", {"n_sizes": 5, "n_random": 2}),
+    ("ffte", "ffte", {"array_len": 1 << 24}),
+    ("is", "npb", {"kernel": "is", "klass": "A"}),
+]
 
 
 def main() -> int:
@@ -22,38 +36,37 @@ def main() -> int:
     args = p.parse_args()
     n = args.nodes
 
-    topos = {f"({n},2)-Ring": graphs.ring(n)}
+    topos = {f"({n},2)-Ring": api.TopologySpec.make("ring", n=n)}
     if n % 2 == 0:
-        topos[f"({n},3)-Wagner"] = graphs.wagner(n)
+        topos[f"({n},3)-Wagner"] = api.TopologySpec.make("wagner", n=n)
     # square-ish torus
-    import math
     a = int(math.sqrt(n))
     while n % a:
         a -= 1
-    topos[f"({n},4)-Torus{a}x{n//a}"] = graphs.torus([a, n // a])
+    topos[f"({n},4)-Torus{a}x{n//a}"] = api.TopologySpec.make("torus", dims=[a, n // a])
     for k in (3, 4):
-        g = search.find_optimal(n, k, seed=0, budget=args.budget)
-        topos[g.name] = g
+        topos[f"({n},{k})-Optimal"] = api.TopologySpec.make(
+            "optimal", n=n, k=k, budget=args.budget, seed=0)
 
-    print(f"{'topology':>22s} {'D':>3s} {'MPL':>7s} {'BW':>4s} | {'alltoall':>8s} {'b_eff':>7s} {'FFTE':>7s} {'IS':>7s}")
-    ring_t = None
+    exp = api.run_experiment(topos, workloads=WORKLOADS)
+
+    print(f"{'topology':>22s} {'D':>3s} {'MPL':>7s} {'BW':>4s} | "
+          f"{'alltoall':>8s} {'b_eff':>7s} {'FFTE':>7s} {'IS':>7s}")
+    ring_name = next(name for name in exp.names if "Ring" in name)
+    ring_v = exp.values[ring_name]
     rows = []
-    for name, g in topos.items():
-        cl = netsim.TAISHAN(g)
-        t = {
-            "a2a": netsim.collective_bench(cl, "alltoall", 1 << 20),
-            "beff": 1.0 / netsim.effective_bandwidth(cl, n_sizes=5, n_random=2),
-            "ffte": netsim.ffte_1d(cl, 1 << 24),
-            "is": netsim.npb(cl, "is", "A"),
-        }
-        if ring_t is None:
-            ring_t = t
-        d = metrics.apsp(g)
-        mpl = metrics.mpl(g, d)
-        rows.append((mpl, ring_t["a2a"] / t["a2a"]))
-        print(f"{name:>22s} {metrics.diameter(g, d):3.0f} {mpl:7.3f} "
-              f"{metrics.bisection_width(g, restarts=8):4d} | "
-              + " ".join(f"{ring_t[k]/t[k]:7.2f}x" for k in ("a2a", "beff", "ffte", "is")))
+    for name in exp.names:
+        v = exp.values[name]
+        s = v["stats"]
+        # beff is a bandwidth (higher = better): ratio inverts vs the times
+        speedups = {"a2a": ring_v["a2a"] / v["a2a"],
+                    "beff": v["beff"] / ring_v["beff"],
+                    "ffte": ring_v["ffte"] / v["ffte"],
+                    "is": ring_v["is"] / v["is"]}
+        rows.append((s.mpl, speedups["a2a"]))
+        print(f"{exp.graphs[name].name:>22s} {s.diameter:3.0f} {s.mpl:7.3f} "
+              f"{s.bw:4d} | "
+              + " ".join(f"{speedups[k]:7.2f}x" for k in ("a2a", "beff", "ffte", "is")))
     mpls, perf = zip(*rows)
     rho = np.corrcoef(1.0 / np.asarray(mpls), perf)[0, 1]
     print(f"\nPearson correlation (1/MPL vs alltoall speed): {rho:.3f} "

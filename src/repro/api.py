@@ -1,0 +1,355 @@
+"""``repro.api`` — the one facade over the paper's whole pipeline.
+
+The paper's loop is *pick a topology family → minimise MPL → benchmark the
+cluster*.  This module is that loop as one API: declarative specs
+(:class:`TopologySpec` / :class:`SearchSpec` from ``repro.core.specs``), the
+registries that validate them (``repro.core.topologies`` families,
+``repro.core.specs`` strategies, ``repro.core.engines`` APSP backends), and
+:func:`run_experiment`, which prices a whole suite of topologies and feeds
+them to the ``netsim``/``collectives`` workloads the paper benchmarks.
+
+    from repro import api
+
+    # build: one entry point for every family (spec object or legacy string)
+    g = api.build_topology("torus:4x8")
+    g = api.build_topology(api.TopologySpec.make("circulant", n=64, offsets=[1, 9]))
+
+    # search: one dispatch for every tier, auto-resolved by N
+    res = api.search(api.SearchSpec(n=32, k=4, seed=0))
+    res = api.search(api.SearchSpec(n=2048, k=6, strategy="large", budget=100))
+
+    # benchmark: a suite of specs through the simulated cluster workloads
+    exp = api.run_experiment(api.paper_suite("16"),
+                             workloads=["stats", ("alltoall", {"unit_bytes": 1 << 20})])
+    print(exp.table())
+
+Everything here is re-exported from the core layers — the facade adds
+spec-keyed caching for the searched families (:func:`build_topology`'s
+``cache_dir=``) and the workload registry behind :func:`run_experiment`, and
+pins the public surface that ``tests/test_api_surface.py`` snapshots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Any, Callable, Iterable, Mapping, Union
+
+from .core import engines, metrics, netsim
+from .core.graphs import Graph, from_edges
+from .core.search import SearchResult
+from .core.specs import (SearchSpec, TopologySpec, register_strategy, search,
+                         search_strategies)
+from .core.topologies import (build_topology as _build_topology, paper_suite,
+                              parse_topology, register_topology,
+                              topology_families)
+
+__all__ = [
+    "TopologySpec",
+    "SearchSpec",
+    "SearchResult",
+    "Graph",
+    "build_topology",
+    "parse_topology",
+    "search",
+    "run_experiment",
+    "ExperimentResult",
+    "paper_suite",
+    "topology_families",
+    "search_strategies",
+    "engine_names",
+    "workload_names",
+    "register_topology",
+    "register_strategy",
+    "register_workload",
+]
+
+
+def engine_names() -> dict[str, tuple[str, ...]]:
+    """The registered APSP engine names by kind (see ``repro.core.engines``)."""
+    return {"rows": engines.ROWS_ENGINES,
+            "circulant": tuple(engines.CIRCULANT_ENGINES)}
+
+
+# --------------------------------------------------------------------------------
+# build_topology with spec-keyed caching for the searched families
+# --------------------------------------------------------------------------------
+
+# Bump whenever the search trajectories behind the searched families change
+# (new PRNG consumption, different tier defaults, ...), so a pre-existing
+# results/benchcache cannot silently serve graphs from older search code —
+# the spec-cache successor of the legacy benchmarks.common CACHE_VERSION.
+CACHE_VERSION = 3
+
+
+def _cache_key(spec: TopologySpec) -> str:
+    digest = hashlib.sha256(spec.to_json().encode()).hexdigest()[:16]
+    return f"spec_v{CACHE_VERSION}_{spec.family}_{digest}"
+
+
+def build_topology(
+    spec: Union[TopologySpec, str, Graph],
+    *,
+    cache_dir: str | None = None,
+    **kw,
+) -> Graph:
+    """Build a topology from a spec object / legacy string / ready Graph.
+
+    With ``cache_dir``, graphs of *searched* families (``optimal`` /
+    ``suboptimal`` — the ones whose construction runs a seeded search) are
+    cached as edge-list JSON keyed by the spec's canonical JSON hash, so
+    re-runs are instant while staying fully reproducible from scratch (the
+    cache file also embeds the spec for provenance).  Constructive families
+    build directly — they are cheaper than the disk round trip.
+    """
+    if isinstance(spec, Graph):
+        return spec
+    from .core import topologies as topo_mod
+
+    # one normalisation point shared with the core builder, so kw overrides
+    # land in the spec and caching/provenance always see them
+    spec = topo_mod.normalize_topology(spec, **kw)
+    if cache_dir is None or not topo_mod.get_family(spec.family).searched:
+        return _build_topology(spec)
+    os.makedirs(cache_dir, exist_ok=True)
+    fn = os.path.join(cache_dir, _cache_key(spec) + ".json")
+    if os.path.exists(fn):
+        with open(fn) as f:
+            d = json.load(f)
+        return from_edges(d["n"], [tuple(e) for e in d["edges"]], d["name"])
+    g = _build_topology(spec)
+    with open(fn, "w") as f:
+        json.dump({"n": g.n, "edges": [list(e) for e in g.edges],
+                   "name": g.name, "spec": json.loads(spec.to_json())}, f)
+    return g
+
+
+# --------------------------------------------------------------------------------
+# Workload registry — the netsim/collectives benchmarks as named, parameterised
+# cells run_experiment dispatches to.
+# --------------------------------------------------------------------------------
+
+_WORKLOADS: dict[str, Callable] = {}
+
+#: registered workload names, in registration order
+WORKLOADS: tuple[str, ...] = ()
+
+
+def register_workload(name: str, fn: Callable) -> Callable:
+    """Register a workload: ``fn(graph, cluster, **params) -> value``.
+
+    ``cluster`` is the routed :class:`repro.core.netsim.Cluster` (None for
+    graph-only workloads declared with ``needs_cluster=False`` attribute).
+    """
+    global WORKLOADS
+    _WORKLOADS[name] = fn
+    if name not in WORKLOADS:
+        WORKLOADS = WORKLOADS + (name,)
+    return fn
+
+
+def workload_names() -> tuple[str, ...]:
+    return WORKLOADS
+
+
+def _wl_stats(g, cl, **kw):
+    return metrics.stats(g, **kw)
+
+
+_wl_stats.needs_cluster = False
+register_workload("stats", _wl_stats)
+register_workload("pingpong_fit",
+                  lambda g, cl, **kw: dict(zip(("T0", "alpha", "rho"),
+                                               netsim.pingpong_fit(cl, **kw))))
+register_workload("pingpong_mean",
+                  lambda g, cl, **kw: netsim.pingpong_mean_latency(cl, **kw))
+register_workload("collective",
+                  lambda g, cl, op="alltoall", unit_bytes=1 << 20, **kw:
+                  netsim.collective_bench(cl, op, float(unit_bytes), **kw))
+register_workload("alltoall",
+                  lambda g, cl, unit_bytes=1 << 20, **kw:
+                  netsim.collective_bench(cl, "alltoall", float(unit_bytes), **kw))
+register_workload("beff",
+                  lambda g, cl, **kw: netsim.effective_bandwidth(cl, **kw))
+register_workload("ffte",
+                  lambda g, cl, array_len=1 << 24, **kw:
+                  netsim.ffte_1d(cl, int(array_len), **kw))
+register_workload("graph500",
+                  lambda g, cl, **kw: netsim.graph500(cl, **kw))
+register_workload("npb",
+                  lambda g, cl, kernel="is", klass="A", **kw:
+                  netsim.npb(cl, kernel, klass, **kw))
+
+
+# --------------------------------------------------------------------------------
+# run_experiment
+# --------------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Everything one :func:`run_experiment` call produced.
+
+    ``values[name][key]`` is the workload value for topology ``name``;
+    ``seconds[name][key]`` the wall time of that cell; ``graphs``/``specs``
+    the built topologies and their provenance specs (None when a ready
+    ``Graph`` was passed in).  ``ratios(key)`` divides a reference
+    topology's (time-like) value by each topology's — the paper's
+    "speedup over ring" convention.
+    """
+
+    names: list[str]
+    specs: dict[str, TopologySpec | None]
+    graphs: dict[str, Graph]
+    values: dict[str, dict[str, Any]]
+    seconds: dict[str, dict[str, float]]
+
+    def ratios(self, key: str, ref: str | None = None) -> dict[str, float]:
+        if ref is None:
+            ref = next((n for n in self.names if "Ring" in n), None)
+            if ref is None:
+                raise ValueError(
+                    "no reference topology: no name contains 'Ring' — pass "
+                    f"ref= explicitly (names: {', '.join(self.names)})")
+        t0 = self.values[ref][key]
+        return {n: t0 / self.values[n][key] for n in self.names}
+
+    def provenance(self) -> dict[str, Any]:
+        """JSON-able record of what was built: name → spec dict (or None)."""
+        return {n: (json.loads(s.to_json()) if s is not None else None)
+                for n, s in self.specs.items()}
+
+    def table(self) -> str:
+        """Plain-text summary table (names × workload keys)."""
+        keys: list[str] = []
+        for n in self.names:
+            for k in self.values[n]:
+                if k not in keys:
+                    keys.append(k)
+        width = max((len(n) for n in self.names), default=8)
+        out = [" " * width + "  " + "  ".join(f"{k:>12s}" for k in keys)]
+        for n in self.names:
+            cells = []
+            for k in keys:
+                v = self.values[n].get(k)
+                cells.append(f"{v:12.4g}" if isinstance(v, (int, float))
+                             else f"{str(v)[:12]:>12s}")
+            out.append(f"{n:>{width}s}  " + "  ".join(cells))
+        return "\n".join(out)
+
+
+def _engine_applies(spec: TopologySpec, engine: str, topo_mod) -> bool:
+    """Whether a suite-wide ``engine=`` override is meaningful for this
+    spec's search tier.  The override is a preference (like ``REPRO_ENGINE``),
+    not a hard requirement: the circulant tier only understands the
+    circulant pricers (``numpy``/``jax``), every other tier the row engines
+    — injecting a mismatched name would crash the suite mid-build, so
+    incompatible specs keep their own resolution instead."""
+    if not topo_mod.get_family(spec.family).searched:
+        return False
+    strategy = str(spec.kwargs.get("strategy", "auto")).replace("_", "-")
+    if spec.family == "optimal" and strategy == "circulant":
+        return engine in engines.CIRCULANT_ENGINES
+    return engine in engines.ROWS_ENGINES
+
+
+def _normalize_workload(entry) -> tuple[str, str, dict]:
+    """str | (name, params) | (key, name, params) → (key, name, params)."""
+    if isinstance(entry, str):
+        return entry, entry, {}
+    if isinstance(entry, Mapping):
+        params = dict(entry)
+        name = params.pop("workload")
+        return params.pop("key", name), name, params
+    entry = tuple(entry)
+    if len(entry) == 2:
+        name, params = entry
+        return name, name, dict(params)
+    key, name, params = entry
+    return key, name, dict(params)
+
+
+def run_experiment(
+    topologies: Mapping[str, Union[TopologySpec, str, Graph]] | Iterable,
+    workloads: Iterable = ("stats",),
+    *,
+    cache_dir: str | None = None,
+    cluster_factory: Callable[[Graph], "netsim.Cluster"] = netsim.TAISHAN,
+    engine: str | None = None,
+) -> ExperimentResult:
+    """Price a suite of topologies through the simulated cluster workloads.
+
+    ``topologies`` maps display names to specs (:class:`TopologySpec`,
+    legacy ``family:args`` strings, or ready ``Graph`` objects); an
+    iterable of specs works too (names come from the built graphs).  Each
+    topology is built once — searched families resolve their strategy and
+    APSP engine through the registries (``engine=`` forwards one engine
+    override to every searched spec whose tier understands it — row engines
+    to the SA/orbit tiers, circulant pricers to the circulant tier — so a
+    whole suite prices through one engine dispatch), with optional
+    spec-keyed caching under ``cache_dir``.
+
+    ``workloads`` entries are registry names (:func:`workload_names`),
+    ``(name, params)`` pairs, or ``(key, name, params)`` triples when the
+    same workload runs twice with different params.  A routed cluster
+    (``cluster_factory``, default the paper's TAISHAN model) is built
+    lazily, only when some workload needs one.  Every cell is timed;
+    values, wall seconds, graphs, and provenance specs come back in an
+    :class:`ExperimentResult`.
+    """
+    if engine in engines.CIRCULANT_ENGINES and engine not in engines.ROWS_ENGINES:
+        pass  # circulant-only pricer ("jax"): the tier probes availability
+    else:
+        engines.check_engine(engine)
+    wl = [_normalize_workload(w) for w in workloads]
+    for _, name, _ in wl:
+        if name not in _WORKLOADS:
+            raise ValueError(
+                f"unknown workload {name!r}: known workloads are "
+                f"{', '.join(WORKLOADS)}")
+
+    if isinstance(topologies, Mapping):
+        entries = list(topologies.items())
+    else:  # iterable: names come from the built graphs
+        entries = [(None, t) for t in topologies]
+    names: list[str] = []
+    specs: dict[str, TopologySpec | None] = {}
+    graphs_out: dict[str, Graph] = {}
+    from .core import topologies as topo_mod
+
+    for disp, t in entries:
+        spec: TopologySpec | None = None
+        if isinstance(t, str):
+            t = parse_topology(t)
+        if isinstance(t, TopologySpec):
+            if engine is not None and "engine" not in t.kwargs \
+                    and _engine_applies(t, engine, topo_mod):
+                t = t.with_params(engine=engine)
+            spec = t
+            g = build_topology(t, cache_dir=cache_dir)
+        else:
+            g = t
+        name = disp if disp is not None else g.name
+        if name in graphs_out:
+            raise ValueError(
+                f"duplicate topology name {name!r}: pass a mapping with "
+                "distinct display names")
+        names.append(name)
+        specs[name] = spec
+        graphs_out[name] = g
+
+    values: dict[str, dict[str, Any]] = {n: {} for n in names}
+    seconds: dict[str, dict[str, float]] = {n: {} for n in names}
+    needs_cluster = any(getattr(_WORKLOADS[name], "needs_cluster", True)
+                        for _, name, _ in wl)
+    for n in names:
+        g = graphs_out[n]
+        cl = cluster_factory(g) if needs_cluster else None
+        for key, wname, params in wl:
+            fn = _WORKLOADS[wname]
+            t0 = time.perf_counter()
+            values[n][key] = fn(g, cl, **params)
+            seconds[n][key] = time.perf_counter() - t0
+    return ExperimentResult(names=names, specs=specs, graphs=graphs_out,
+                            values=values, seconds=seconds)

@@ -415,40 +415,24 @@ def random_hamiltonian_regular(n: int, k: int, seed: int = 0, max_tries: int = 5
 # --------------------------------------------------------------------------------
 
 def build(spec: str, **kw) -> Graph:
-    """Build a topology from a string spec, e.g. ``ring:16``, ``torus:4x8``,
-    ``wagner:32``, ``circulant:32:1,7``, ``dragonfly:4,5,1``, ``optimal:16,3``.
+    """Deprecated shim: build a topology from a string spec.
 
-    ``optimal:N,k`` runs the (seeded) search in ``repro.core.search`` — callers
-    that need reproducibility should pass ``seed=``.
+    Use ``repro.api.build_topology`` (or ``repro.core.topologies``) instead —
+    this delegates there, so the grammar (``ring:16``, ``torus:4x8``,
+    ``wagner:32``, ``circulant:32:1,7``, ``dragonfly:4,5,1``,
+    ``optimal:16,3``) and the resulting graphs are unchanged, and unknown
+    family names now raise a ``ValueError`` listing every registered family
+    instead of an opaque KeyError/AttributeError.
     """
-    parts = spec.split(":")
-    kind = parts[0]
-    if kind == "ring":
-        return ring(int(parts[1]))
-    if kind == "wagner":
-        return wagner(int(parts[1]))
-    if kind == "bidiakis":
-        return bidiakis(int(parts[1]))
-    if kind == "chvatal":
-        return chvatal32() if len(parts) > 1 and parts[1] == "32" else chvatal()
-    if kind == "torus":
-        return torus([int(d) for d in parts[1].split("x")])
-    if kind == "hypercube":
-        return hypercube(int(parts[1]))
-    if kind == "complete":
-        return complete(int(parts[1]))
-    if kind == "circulant":
-        n = int(parts[1])
-        offs = [int(s) for s in parts[2].split(",")]
-        return circulant(n, offs)
-    if kind == "dragonfly":
-        args = [int(s) for s in parts[1].split(",")]
-        return dragonfly(*args)
-    if kind == "optimal":
-        from . import search  # lazy: avoid cycle
-        n, k = (int(s) for s in parts[1].split(","))
-        return search.find_optimal(n, k, **kw)
-    raise ValueError(f"unknown topology spec {spec!r}")
+    import warnings
+
+    warnings.warn(
+        "graphs.build is deprecated: use repro.api.build_topology (a "
+        "TopologySpec or the same 'family:args' string)",
+        DeprecationWarning, stacklevel=2)
+    from . import topologies  # lazy: topologies imports this module
+
+    return topologies.build_topology(spec, **kw)
 
 
 REGISTRY = {

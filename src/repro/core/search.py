@@ -393,7 +393,12 @@ def sa_search(
 
     reps: list[_Replica] = []
     for r in range(replicas):
-        g0 = start or random_hamiltonian_regular(n, k, seed=[seed, r])
+        # a generous retry cap: some (n, k, seed) streams need >500 pairing
+        # draws (e.g. (30,5) seed [0,1]); extra tries only consume the stream
+        # after the old cap would have errored, so existing trajectories are
+        # untouched
+        g0 = start or random_hamiltonian_regular(n, k, seed=[seed, r],
+                                                 max_tries=20000)
         reps.append(_Replica(g0.adjacency(), ring_mask, t_start,
                              np.random.default_rng([seed, r]), n_iter))
 
@@ -1249,30 +1254,25 @@ def find_optimal(
     method: str | None = None,
     replicas: int | None = None,
 ) -> Graph:
-    """Paper-facing driver: pick a search tier by size and return best graph.
+    """Deprecated shim: the paper-facing driver, now a thin delegate to the
+    declarative ``repro.core.specs.search`` dispatch.
 
     method: 'exhaustive' | 'sa' | 'circulant' | 'symmetric' | 'large' |
-    None (auto).  Auto policy: pinned edge lists from ``known_optimal`` are
-    returned instantly; n <= 64 → parallel-replica SA; larger →
-    ``large_search`` (pinned-or-searched circulant + orbit-SA polish).
+    None (auto).  The strategy registry reproduces every branch of the old
+    if-ladder byte-identically per seed — the auto policy (pinned edge lists
+    from ``known_optimal`` instantly; n <= 64 → parallel-replica SA; larger
+    → ``large_search``) now lives in ``specs.resolve_strategy``, and new
+    tiers are registrations instead of new branches here.
     """
-    if method is None:
-        from .known_optimal import KNOWN_EDGE_LISTS
+    import warnings
 
-        if (n, k) in KNOWN_EDGE_LISTS:
-            return from_edges(n, KNOWN_EDGE_LISTS[(n, k)], f"({n},{k})-Optimal")
-        method = "sa" if n <= 64 else "large"
-    if method == "exhaustive":
-        return exhaustive_search(n, k, limit=budget or 200_000).graph
-    if method == "sa":
-        tgt = KNOWN_OPTIMAL_MPL.get((n, k))
-        res = sa_search(n, k, seed=seed, n_iter=budget or 4000, target_mpl=tgt,
-                        replicas=replicas or (3 if n <= 40 else 2))
-        return res.graph.with_name(f"({n},{k})-Optimal")
-    if method == "circulant":
-        return circulant_search(n, k, seed=seed, n_iter=budget or 300).graph
-    if method == "symmetric":
-        return symmetric_sa_search(n, k, seed=seed, n_iter=budget or 3000).graph
-    if method == "large":
-        return large_search(n, k, seed=seed, budget=budget).graph
-    raise ValueError(f"unknown method {method!r}")
+    warnings.warn(
+        "find_optimal is deprecated: use repro.api.search(SearchSpec(n, k, "
+        "strategy=..., budget=..., seed=...)) — auto strategy reproduces "
+        "find_optimal's tier policy exactly",
+        DeprecationWarning, stacklevel=2)
+    from . import specs  # lazy: specs imports this module
+
+    return specs.search(specs.SearchSpec(
+        n=n, k=k, seed=seed, budget=budget, strategy=method or "auto",
+        replicas=replicas)).graph

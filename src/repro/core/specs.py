@@ -1,0 +1,406 @@
+"""Declarative specs + the search-strategy registry.
+
+This module is one half of the unified API layer (the other half is
+``repro.core.topologies``, the topology-family registry; ``repro.api`` is the
+facade over both):
+
+- :class:`TopologySpec` — a frozen, hashable, JSON-round-trippable
+  description of *which graph to build* (family name + params + seed).  The
+  family names it may carry are validated by ``repro.core.topologies``.
+- :class:`SearchSpec` — the same for *which search to run*: (n, k,
+  objective, strategy, budget, fold, replicas, engine, seed) plus free-form
+  strategy params.  ``search(spec)`` is the single dispatch that replaced
+  ``find_optimal``'s if-ladder.
+- the **strategy registry**: each search tier (``pinned`` / ``exhaustive`` /
+  ``sa`` / ``circulant`` / ``symmetric-sa`` / ``large``) registers a
+  :class:`SearchStrategy` adapter, exactly like the APSP backends register
+  in ``repro.core.engines``.  ``strategy="auto"`` resolves by N-tier with
+  the same policy the legacy ``find_optimal`` driver used (pinned edge list
+  → parallel-replica SA at n <= 64 → the circulant+polish large tier), so
+  the legacy driver is now a thin, trajectory-identical shim over
+  :func:`search`.
+
+Contract: ``search(SearchSpec(n, k, strategy=X, budget=B, seed=S, ...))`` is
+byte-identical per seed to the legacy ``find_optimal(n, k, method=X,
+budget=B, seed=S)`` branch it replaced (asserted by ``tests/test_specs.py``),
+and every spec round-trips through JSON without changing the resulting
+graph/trajectory — which is what makes the ``spec`` provenance rows embedded
+in ``BENCH_search.json`` replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import numbers
+from typing import Any, Callable, Iterable, Mapping
+
+__all__ = [
+    "TopologySpec",
+    "SearchSpec",
+    "SearchStrategy",
+    "register_strategy",
+    "search_strategies",
+    "resolve_strategy",
+    "search",
+]
+
+
+# --------------------------------------------------------------------------------
+# Canonicalisation: params live in frozen dataclasses, so they are stored as
+# sorted (key, value) tuples with lists coerced to tuples — hashable, order
+# independent, and loss-lessly convertible to/from JSON dicts.
+# --------------------------------------------------------------------------------
+
+def _freeze(value):
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    if isinstance(value, Mapping):
+        return tuple(sorted((str(k), _freeze(v)) for k, v in value.items()))
+    if isinstance(value, (str, bytes, bool, type(None))):
+        return value
+    # numbers.Integral/Real catch numpy scalars too (np.int64 is NOT a
+    # subclass of int) -> plain python ints/floats, so specs JSON-dump
+    if isinstance(value, numbers.Integral):
+        return int(value)
+    if isinstance(value, numbers.Real):
+        return float(value)
+    return value
+
+
+def _thaw(value):
+    if isinstance(value, tuple):
+        return [_thaw(v) for v in value]
+    return value
+
+
+def _params_tuple(params: Mapping[str, Any] | Iterable | None) -> tuple:
+    if params is None:
+        return ()
+    if isinstance(params, Mapping):
+        items = params.items()
+    else:
+        items = tuple(params)
+        items = [(k, v) for k, v in items]
+    return tuple(sorted((str(k), _freeze(v)) for k, v in items))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Declarative description of a topology: family + params + seed.
+
+    ``params`` accepts a dict at construction and is stored canonically
+    (sorted key/value tuples, lists frozen to tuples), so specs are hashable
+    and equal iff they describe the same graph.  ``seed`` only matters for
+    stochastic families (searched/random graphs) and defaults to 0.
+
+    Round trip: ``TopologySpec.from_json(spec.to_json())`` == ``spec`` and
+    builds the identical ``Graph`` (asserted in tests/test_specs.py).
+    """
+
+    family: str
+    params: tuple = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "family", str(self.family).replace("_", "-"))
+        object.__setattr__(self, "params", _params_tuple(self.params))
+        object.__setattr__(self, "seed", int(self.seed))
+
+    @classmethod
+    def make(cls, family: str, seed: int = 0, **params) -> "TopologySpec":
+        return cls(family=family, params=params, seed=seed)
+
+    @property
+    def kwargs(self) -> dict[str, Any]:
+        """The params as a plain dict (tuples preserved for hashability)."""
+        return {k: v for k, v in self.params}
+
+    def with_params(self, **params) -> "TopologySpec":
+        """A copy with ``params`` merged in (None values remove keys)."""
+        merged = self.kwargs
+        for k, v in params.items():
+            if v is None:
+                merged.pop(k, None)
+            else:
+                merged[k] = v
+        return TopologySpec(self.family, merged, self.seed)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"family": self.family, "seed": self.seed,
+             "params": {k: _thaw(v) for k, v in self.params}},
+            sort_keys=True)
+
+    @classmethod
+    def from_json(cls, data: str | Mapping[str, Any]) -> "TopologySpec":
+        d = json.loads(data) if isinstance(data, str) else dict(data)
+        return cls(family=d["family"], params=d.get("params") or {},
+                   seed=d.get("seed", 0))
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """Declarative description of a topology search.
+
+    Core knobs every tier understands are first-class fields; anything
+    strategy-specific (``target_mpl``, ``start_offsets``, ``incremental``,
+    ``moves_per_step``, ``girth_min`` …) rides in ``params`` and is forwarded
+    to the strategy's underlying entry point verbatim.  ``budget`` maps onto
+    each tier's natural budget knob (``n_iter`` for the SA tiers, ``limit``
+    for the exhaustive tier, the two-stage budget for ``large``).
+
+    ``strategy="auto"`` resolves by N-tier exactly like the legacy
+    ``find_optimal`` driver; ``objective`` currently must be ``"mpl"`` (the
+    paper's objective) and exists so future objectives are a spec field, not
+    a new entry point.  The reserved ``graph_name`` param renames the result
+    graph after the run (how the auto-SA tier pins its ``(n,k)-Optimal``
+    naming without a special case in the strategy).
+    """
+
+    n: int
+    k: int
+    objective: str = "mpl"
+    strategy: str = "auto"
+    budget: int | None = None
+    fold: int | None = None
+    replicas: int | None = None
+    engine: str | None = None
+    seed: int = 0
+    params: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "n", int(self.n))
+        object.__setattr__(self, "k", int(self.k))
+        strategy = str(self.strategy or "auto").replace("_", "-")
+        # legacy find_optimal alias, honoured everywhere specs are built
+        strategy = {"symmetric": "symmetric-sa"}.get(strategy, strategy)
+        object.__setattr__(self, "strategy", strategy)
+        object.__setattr__(self, "params", _params_tuple(self.params))
+        object.__setattr__(self, "seed", int(self.seed))
+        for f in ("budget", "fold", "replicas"):  # numpy ints -> python ints
+            v = getattr(self, f)
+            if v is not None:
+                object.__setattr__(self, f, int(v))
+
+    @classmethod
+    def make(cls, n: int, k: int, **kw) -> "SearchSpec":
+        fields = {f.name for f in dataclasses.fields(cls)} - {"params"}
+        params = {k_: v for k_, v in kw.items() if k_ not in fields}
+        core = {k_: v for k_, v in kw.items() if k_ in fields}
+        return cls(n=n, k=k, params=params, **core)
+
+    @property
+    def kwargs(self) -> dict[str, Any]:
+        return {k: v for k, v in self.params}
+
+    def with_overrides(self, **kw) -> "SearchSpec":
+        return dataclasses.replace(self, **kw)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["params"] = {k: _thaw(v) for k, v in self.params}
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, data: str | Mapping[str, Any]) -> "SearchSpec":
+        d = json.loads(data) if isinstance(data, str) else dict(data)
+        return cls(**{**d, "params": d.get("params") or {}})
+
+
+# --------------------------------------------------------------------------------
+# Strategy registry — search tiers register here like engines register in
+# repro.core.engines; the registry is the single strategy-name validation
+# point and owns the auto N-tier policy.
+# --------------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SearchStrategy:
+    """One registered search tier: a name, the adapter that maps a
+    :class:`SearchSpec` onto the tier's entry point, and a doc line for the
+    registry tables in docs/ARCHITECTURE.md."""
+
+    name: str
+    run: Callable[[SearchSpec], "Any"]
+    doc: str = ""
+
+
+_STRATEGIES: dict[str, SearchStrategy] = {}
+
+#: registered strategy names, in registration order (extended live by
+#: :func:`register_strategy`, so out-of-tree strategies resolve like the
+#: built-ins)
+STRATEGIES: tuple[str, ...] = ()
+
+
+def register_strategy(name: str, run: Callable, doc: str = "") -> SearchStrategy:
+    """Register (or replace) a search strategy under ``name``."""
+    global STRATEGIES
+    strat = SearchStrategy(name=name, run=run, doc=doc)
+    _STRATEGIES[name] = strat
+    if name not in STRATEGIES:
+        STRATEGIES = STRATEGIES + (name,)
+    return strat
+
+
+def search_strategies() -> tuple[str, ...]:
+    """Registered strategy names (the validation universe for ``strategy=``)."""
+    return STRATEGIES
+
+
+def get_strategy(name: str) -> SearchStrategy:
+    strat = _STRATEGIES.get(str(name).replace("_", "-"))
+    if strat is None:
+        raise ValueError(
+            f"strategy={name!r} must be one of {STRATEGIES + ('auto',)}")
+    return strat
+
+
+def resolve_strategy(spec: SearchSpec) -> SearchSpec:
+    """Validate ``spec`` and resolve ``strategy="auto"`` by N-tier.
+
+    The auto policy is byte-identical to the legacy ``find_optimal`` ladder:
+    a pinned edge list in ``known_optimal`` wins instantly, n <= 64 runs the
+    parallel-replica SA tier, anything larger the circulant+polish large
+    tier.  Returns a spec whose ``strategy`` is a concrete registered name.
+    """
+    from . import engines  # lazy: keep spec construction import-light
+
+    if spec.objective != "mpl":
+        raise ValueError(
+            f"objective={spec.objective!r} is not supported: the paper's "
+            "searches minimise 'mpl' (register a strategy for new objectives)")
+    if spec.engine in engines.CIRCULANT_ENGINES and \
+            spec.engine not in engines.ROWS_ENGINES:
+        pass  # circulant-only pricer ("jax"): the tier probes availability
+    else:
+        engines.check_engine(spec.engine)
+    if spec.strategy != "auto":
+        get_strategy(spec.strategy)  # loud ValueError on unknown names
+        return spec
+    from .known_optimal import KNOWN_EDGE_LISTS
+
+    if (spec.n, spec.k) in KNOWN_EDGE_LISTS:
+        return spec.with_overrides(strategy="pinned")
+    return spec.with_overrides(strategy="sa" if spec.n <= 64 else "large")
+
+
+def search(spec: SearchSpec):
+    """Run the search a :class:`SearchSpec` describes → ``SearchResult``.
+
+    This is the single paper-facing dispatch: strategy names are validated
+    against the registry, ``auto`` resolves by N-tier, and the selected
+    adapter maps the spec onto its tier's entry point with the exact legacy
+    defaults — so ``search(spec)`` reproduces the corresponding
+    ``find_optimal(method=...)`` trajectory bit-for-bit per seed.
+    """
+    spec = resolve_strategy(spec)
+    res = get_strategy(spec.strategy).run(spec)
+    name = spec.kwargs.get("graph_name")
+    if name:
+        res.graph = res.graph.with_name(str(name))
+    return res
+
+
+# --------------------------------------------------------------------------------
+# Built-in strategy adapters.  Each maps SearchSpec fields onto one legacy
+# entry point with that branch's historical defaults; spec.params pass
+# through verbatim (so target_mpl / start_offsets / incremental / ... stay
+# reachable).  The underlying functions keep their signatures — they ARE the
+# implementations; the adapters only translate.
+# --------------------------------------------------------------------------------
+
+def _strip(kw: dict, *reserved: str) -> dict:
+    out = dict(kw)
+    for r in ("graph_name",) + reserved:
+        out.pop(r, None)
+    return out
+
+
+def _run_pinned(spec: SearchSpec):
+    from . import metrics, search as search_mod
+    from .graphs import from_edges
+    from .known_optimal import KNOWN_EDGE_LISTS
+
+    edges = KNOWN_EDGE_LISTS.get((spec.n, spec.k))
+    if edges is None:
+        raise ValueError(
+            f"no pinned edge list for ({spec.n},{spec.k}) in known_optimal")
+    g = from_edges(spec.n, edges, f"({spec.n},{spec.k})-Optimal")
+    mpl, diam = search_mod._graph_mpl_d(g)
+    return search_mod.SearchResult(
+        graph=g, mpl=mpl, diameter=diam,
+        mpl_lb=metrics.mpl_lower_bound(spec.n, spec.k),
+        d_lb=metrics.diameter_lower_bound(spec.n, spec.k),
+        iterations=0, accepted=0, history=[mpl])
+
+
+def _run_exhaustive(spec: SearchSpec):
+    from . import search as search_mod
+
+    return search_mod.exhaustive_search(
+        spec.n, spec.k, limit=spec.budget or 200_000, **_strip(spec.kwargs))
+
+
+def _run_sa(spec: SearchSpec):
+    from . import search as search_mod
+
+    kw = _strip(spec.kwargs)
+    if "target_mpl" not in kw:
+        kw["target_mpl"] = search_mod.KNOWN_OPTIMAL_MPL.get((spec.n, spec.k))
+    res = search_mod.sa_search(
+        spec.n, spec.k, seed=spec.seed, n_iter=spec.budget or 4000,
+        replicas=spec.replicas or (3 if spec.n <= 40 else 2), **kw)
+    if "graph_name" not in spec.kwargs:  # the legacy paper-facing naming
+        res.graph = res.graph.with_name(f"({spec.n},{spec.k})-Optimal")
+    return res
+
+
+def _run_circulant(spec: SearchSpec):
+    from . import search as search_mod
+
+    return search_mod.circulant_search(
+        spec.n, spec.k, seed=spec.seed, n_iter=spec.budget or 300,
+        engine=spec.engine or "auto", **_strip(spec.kwargs))
+
+
+def _run_symmetric_sa(spec: SearchSpec):
+    from . import search as search_mod
+
+    kw = _strip(spec.kwargs)
+    if "start_offsets" in kw and kw["start_offsets"] is not None:
+        kw["start_offsets"] = tuple(kw["start_offsets"])
+    return search_mod.symmetric_sa_search(
+        spec.n, spec.k, seed=spec.seed, n_iter=spec.budget or 3000,
+        fold=spec.fold if spec.fold is not None else 4,
+        engine=spec.engine, **kw)
+
+
+def _run_large(spec: SearchSpec):
+    from . import search as search_mod
+
+    return search_mod.large_search(
+        spec.n, spec.k, seed=spec.seed, budget=spec.budget,
+        fold=spec.fold if spec.fold is not None else 4,
+        engine=spec.engine, replicas=spec.replicas or 1,
+        **_strip(spec.kwargs))
+
+
+register_strategy(
+    "pinned", _run_pinned,
+    "return the pre-searched edge list pinned in known_optimal (exact)")
+register_strategy(
+    "exhaustive", _run_exhaustive,
+    "enumerate ring+chord graphs, k=3 matching chords (tiny N, exact)")
+register_strategy(
+    "sa", _run_sa,
+    "paper Algorithm 1: parallel-replica SA with incremental APSP (N <= ~128)")
+register_strategy(
+    "circulant", _run_circulant,
+    "offset-set hillclimb over circulants, implicit-BFS priced (N to 16384)")
+register_strategy(
+    "symmetric-sa", _run_symmetric_sa,
+    "orbit-level SA under fold-fold rotational symmetry, SymmetricAPSP priced")
+register_strategy(
+    "large", _run_large,
+    "pinned-or-searched circulant warm start + orbit-SA polish (replica-sharded "
+    "when replicas > 1)")

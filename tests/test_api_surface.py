@@ -1,0 +1,124 @@
+"""API-surface snapshot: the public `repro.api` facade and every registry
+name universe are pinned here, so an accidental rename/removal/addition
+fails CI loudly instead of silently changing the paper-facing API.
+
+Intentional surface changes must update BOTH this snapshot and the registry
+tables in docs/ARCHITECTURE.md (the docs job cross-checks the module
+paths).  The CI test jobs run this file as an explicit `api-surface` step.
+"""
+from repro import api
+from repro.core import engines, specs, topologies
+
+# --- the frozen snapshot ------------------------------------------------------
+
+API_SURFACE = (
+    "TopologySpec",
+    "SearchSpec",
+    "SearchResult",
+    "Graph",
+    "build_topology",
+    "parse_topology",
+    "search",
+    "run_experiment",
+    "ExperimentResult",
+    "paper_suite",
+    "topology_families",
+    "search_strategies",
+    "engine_names",
+    "workload_names",
+    "register_topology",
+    "register_strategy",
+    "register_workload",
+)
+
+TOPOLOGY_FAMILIES = (
+    "ring",
+    "complete",
+    "wagner",
+    "bidiakis",
+    "chvatal",
+    "chvatal32",
+    "petersen",
+    "circulant",
+    "torus",
+    "hypercube",
+    "dragonfly",
+    "random-regular",
+    "random-hamiltonian-regular",
+    "optimal",
+    "suboptimal",
+)
+
+SEARCH_STRATEGIES = (
+    "pinned",
+    "exhaustive",
+    "sa",
+    "circulant",
+    "symmetric-sa",
+    "large",
+)
+
+ROWS_ENGINES = ("c", "numpy", "bitset", "pallas")
+CIRCULANT_ENGINES = ("numpy", "jax")
+
+WORKLOADS = (
+    "stats",
+    "pingpong_fit",
+    "pingpong_mean",
+    "collective",
+    "alltoall",
+    "beff",
+    "ffte",
+    "graph500",
+    "npb",
+)
+
+PAPER_SUITES = ("16", "32", "256", "dragonfly", "large-dragonfly")
+
+
+# --- the checks ---------------------------------------------------------------
+
+def test_api_all_snapshot():
+    assert tuple(api.__all__) == API_SURFACE
+    for name in API_SURFACE:
+        assert getattr(api, name, None) is not None, name
+
+
+def test_topology_family_snapshot():
+    assert topologies.topology_families() == TOPOLOGY_FAMILIES
+    assert api.topology_families() == TOPOLOGY_FAMILIES
+
+
+def test_search_strategy_snapshot():
+    assert specs.search_strategies() == SEARCH_STRATEGIES
+    assert api.search_strategies() == SEARCH_STRATEGIES
+
+
+def test_engine_name_snapshot():
+    assert engines.ROWS_ENGINES == ROWS_ENGINES
+    assert tuple(engines.CIRCULANT_ENGINES) == CIRCULANT_ENGINES
+    assert api.engine_names() == {"rows": ROWS_ENGINES,
+                                  "circulant": CIRCULANT_ENGINES}
+
+
+def test_workload_snapshot():
+    assert api.workload_names() == WORKLOADS
+
+
+def test_paper_suite_snapshot():
+    assert tuple(topologies.PAPER_SUITES) == PAPER_SUITES
+    for key in PAPER_SUITES:
+        suite = api.paper_suite(key)
+        assert suite, key
+        for spec in suite.values():
+            assert spec.family in TOPOLOGY_FAMILIES
+
+
+def test_spec_field_snapshot():
+    import dataclasses
+
+    assert tuple(f.name for f in dataclasses.fields(api.TopologySpec)) == \
+        ("family", "params", "seed")
+    assert tuple(f.name for f in dataclasses.fields(api.SearchSpec)) == \
+        ("n", "k", "objective", "strategy", "budget", "fold", "replicas",
+         "engine", "seed", "params")

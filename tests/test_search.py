@@ -67,6 +67,14 @@ def test_engine_uses_delta_evaluation():
     assert res.evals_delta >= 9 * res.evals_full
 
 
+def test_sa_search_survives_hard_start_sampling():
+    """Regression: some (n, k, replica-seed) streams need more than 500
+    pairing-model draws for the Hamiltonian start — (30,5) replica stream
+    [0,1] used to RuntimeError, breaking the dragonfly paper suite cold."""
+    res = search.sa_search(30, 5, seed=0, n_iter=10, replicas=3)
+    assert res.graph.n == 30 and res.graph.degree() == 5
+
+
 def test_exhaustive_tiny():
     res = search.exhaustive_search(10, 3)
     assert res.graph.degree() == 3
