@@ -275,6 +275,43 @@ def run(smoke: bool = False) -> common.Rows:
             "spec": _spec_dict(spec_p),
         })
 
+    # --- co-design tier: objective="collective-time" ------------------------
+    # fig4_schedule: the searched topology + its synthesized allreduce
+    # schedule (repro.comm.schedules) against the legacy ring schedule on the
+    # mainstream fig-4 baselines (ring, torus) at the same message size.
+    # CI smoke asserts ratio_vs_ring > 1: co-design must beat ring-on-
+    # mainstream, the paper's headline claim closed end to end.
+    from repro.comm import schedules
+    from repro.core import netsim
+
+    op, unit = "allreduce", 1 << 18
+    spec = SearchSpec.make(16, 4, objective="collective-time", seed=0,
+                           budget=150 if smoke else 600, op=op,
+                           unit_bytes=unit)
+    t0 = time.perf_counter()
+    res = api.search(spec)
+    dt = time.perf_counter() - t0
+    synth = schedules.synthesize(res.graph, op, unit)
+    baselines = {name: netsim.collective_bench(
+        netsim.TAISHAN(api.build_topology(s)), op, float(unit))
+        for name, s in (("ring", "ring:16"), ("torus", "torus:4x4"))}
+    ratio_ring = baselines["ring"] / synth.time
+    ratio_torus = baselines["torus"] / synth.time
+    rows.add("fig4_schedule", dt,
+             f"{op}@{unit >> 10}KB synth={synth.algorithm} "
+             f"{synth.time * 1e3:.2f}ms ring={baselines['ring'] * 1e3:.2f}ms "
+             f"torus={baselines['torus'] * 1e3:.2f}ms "
+             f"ratio_vs_ring={ratio_ring:.2f} ratio_vs_torus={ratio_torus:.2f}")
+    results.append({
+        "name": "fig4_schedule", "n": 16, "k": 4, "op": op,
+        "unit_bytes": unit, "wall_s": round(dt, 4),
+        "algorithm": synth.algorithm, "synth_s": synth.time,
+        "ring_s": baselines["ring"], "torus_s": baselines["torus"],
+        "ratio_vs_ring": round(ratio_ring, 4),
+        "ratio_vs_torus": round(ratio_torus, 4),
+        "mpl": res.mpl, "spec": _spec_dict(spec),
+    })
+
     out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")
     os.makedirs(out_dir, exist_ok=True)
     # refuse to leave mixed-case leftovers: a stale bench_search.json (or any

@@ -40,8 +40,9 @@ MODULES = {
 }
 
 # fast, dependency-light subset for the CI bench-smoke job (bench_search
-# additionally honours smoke=True with reduced budgets)
-SMOKE_KEYS = ["bench_search"]
+# additionally honours smoke=True with reduced budgets; fig4 emits the
+# spec-embedded BENCH_fig4.json rows in seconds)
+SMOKE_KEYS = ["bench_search", "fig4"]
 
 
 def main(argv=None) -> int:

@@ -40,7 +40,8 @@ from typing import Any, Callable, Iterable, Mapping, Union
 from .core import engines, metrics, netsim
 from .core.graphs import Graph, from_edges
 from .core.search import SearchResult
-from .core.specs import (SearchSpec, TopologySpec, register_strategy, search,
+from .core.specs import (SearchSpec, TopologySpec, objective_names,
+                         register_objective, register_strategy, search,
                          search_strategies)
 from .core.topologies import (build_topology as _build_topology, paper_suite,
                               parse_topology, register_topology,
@@ -61,9 +62,12 @@ __all__ = [
     "search_strategies",
     "engine_names",
     "workload_names",
+    "objective_names",
     "register_topology",
     "register_strategy",
     "register_workload",
+    "register_objective",
+    "main",
 ]
 
 
@@ -168,6 +172,10 @@ register_workload("pingpong_mean",
 register_workload("collective",
                   lambda g, cl, op="alltoall", unit_bytes=1 << 20, **kw:
                   netsim.collective_bench(cl, op, float(unit_bytes), **kw))
+register_workload("collective_synth",
+                  lambda g, cl, op="allreduce", unit_bytes=1 << 20, **kw:
+                  netsim.collective_bench(cl, op, float(unit_bytes),
+                                          schedule="synth", **kw))
 register_workload("alltoall",
                   lambda g, cl, unit_bytes=1 << 20, **kw:
                   netsim.collective_bench(cl, "alltoall", float(unit_bytes), **kw))
@@ -353,3 +361,75 @@ def run_experiment(
             seconds[n][key] = time.perf_counter() - t0
     return ExperimentResult(names=names, specs=specs, graphs=graphs_out,
                             values=values, seconds=seconds)
+
+
+# --------------------------------------------------------------------------------
+# CLI — `python -m repro.api spec.json` runs one experiment end to end and
+# writes the ExperimentResult as JSON: the one-shot replayable surface the
+# ROADMAP experiment-service item asks for.  The spec file is exactly the
+# provenance dicts the benchmarks embed, so any BENCH_*.json row replays.
+# --------------------------------------------------------------------------------
+
+def _json_default(o):
+    """JSON fallback for workload values: dataclasses (CollectiveReport,
+    SearchResult, ...) → dicts, numpy scalars/arrays → python."""
+    if dataclasses.is_dataclass(o) and not isinstance(o, type):
+        return dataclasses.asdict(o)
+    if hasattr(o, "item") and getattr(o, "shape", None) == ():
+        return o.item()
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    return str(o)
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Entry point for ``python -m repro.api``.
+
+    The spec file is a JSON object with either ``"suite"`` (a
+    :func:`paper_suite` key) or ``"topologies"`` (name → TopologySpec dict or
+    legacy ``family:args`` string, or a plain list of either), plus
+    ``"workloads"`` (registry names, ``[name, params]`` pairs, or
+    ``{"workload": name, ...params}`` dicts) and optional ``"engine"`` /
+    ``"cache_dir"``.  The result JSON carries names, values, wall seconds,
+    provenance specs, and the plain-text table.
+    """
+    import argparse
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="Run one repro experiment from a spec JSON file.")
+    p.add_argument("spec", help="path to the experiment spec JSON")
+    p.add_argument("-o", "--output", default=None,
+                   help="write result JSON here (default: stdout)")
+    args = p.parse_args(argv)
+    with open(args.spec) as f:
+        d = json.load(f)
+
+    def _topo(v):
+        return TopologySpec.from_json(v) if isinstance(v, Mapping) else v
+
+    if "suite" in d:
+        topologies = paper_suite(str(d["suite"]))
+    else:
+        raw = d.get("topologies")
+        if raw is None:
+            raise SystemExit("spec JSON needs 'suite' or 'topologies'")
+        topologies = {k: _topo(v) for k, v in raw.items()} \
+            if isinstance(raw, Mapping) else [_topo(v) for v in raw]
+    workloads = [tuple(w) if isinstance(w, list) else w
+                 for w in d.get("workloads") or ["stats"]]
+    exp = run_experiment(topologies, workloads=workloads,
+                         engine=d.get("engine"), cache_dir=d.get("cache_dir"))
+    out = {"names": exp.names, "values": exp.values, "seconds": exp.seconds,
+           "provenance": exp.provenance(), "table": exp.table()}
+    text = json.dumps(out, indent=2, sort_keys=True, default=_json_default)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess test
+    raise SystemExit(main())

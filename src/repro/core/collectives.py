@@ -19,6 +19,16 @@ Cost model (paper §4.2 + SimGrid setup of §4.4.2):
 The serialization term is where static-routing congestion bites the torus on
 all-to-all (paper's repeated observation); the latency term is where MPL/D
 bite everything else.
+
+The rank-space algorithms below (binomial trees, rank-ring allreduce,
+pairwise alltoall) are **the documented legacy cost model**: they schedule in
+rank space and ignore the physical graph except through routing, exactly like
+the hop-count heuristics the paper's fig-4 used.  Topology-aware schedules —
+synthesized per graph from its actual structure — live in
+``repro.comm.schedules`` and are benchmarked *against* this model; every
+caller that used to hand-roll algorithm selection (e.g. the power-of-two
+allreduce pick that was split between netsim and the fig-4 benchmark) now
+goes through :func:`default_allreduce`.
 """
 from __future__ import annotations
 
@@ -51,6 +61,7 @@ __all__ = [
     "alltoall_pairwise",
     "alltoall_direct",
     "ALGORITHMS",
+    "default_allreduce",
     "collective_time",
 ]
 
@@ -343,6 +354,14 @@ ALGORITHMS: dict[str, Callable[..., Schedule]] = {
     "alltoall": alltoall_pairwise,
     "alltoall_direct": alltoall_direct,
 }
+
+
+def default_allreduce(n: int) -> str:
+    """The legacy MPICH-style allreduce pick for ``n`` ranks: recursive
+    doubling on power-of-two counts, ring reduce-scatter+allgather otherwise.
+    The single selection point for every legacy-cost-model caller (netsim's
+    graph500 level-sync, benchmark rows)."""
+    return "allreduce_recdbl" if n > 1 and (n & (n - 1)) == 0 else "allreduce"
 
 
 def collective_time(

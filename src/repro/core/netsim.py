@@ -117,14 +117,30 @@ def pingpong_mean_latency(cl: Cluster, nbytes: float = 1024.0) -> float:
 # MPI collectives (paper §4.2.2, Fig. 4)
 # ------------------------------------------------------------------------------
 
-def collective_bench(cl: Cluster, op: str, unit_bytes: float) -> float:
+def collective_bench(cl: Cluster, op: str, unit_bytes: float,
+                     schedule: str = "legacy") -> float:
     """Predicted runtime of one collective with the paper's message sizing.
 
     For bcast/reduce: every rank's buffer is ``unit_bytes``.  For scatter and
     alltoall the per-pair chunk is ``unit_bytes`` (paper: 'transfer message
     sizes are either equal to the unit message sizes or the unit sizes
     multiplied by the number of nodes, depending on whether it is the root').
+
+    ``schedule`` picks the cost model: ``"legacy"`` prices the rank-space
+    algorithms in ``repro.core.collectives`` (the paper's hop-count
+    heuristics); ``"synth"`` synthesizes a per-topology schedule via
+    ``repro.comm.schedules`` for the ops that subsystem covers (bcast /
+    reduce / scatter / gather / allreduce) and falls back to legacy for the
+    rest (alltoall, *_recdbl variants).
     """
+    if schedule not in ("legacy", "synth"):
+        raise ValueError(f"schedule={schedule!r} must be 'legacy' or 'synth'")
+    if schedule == "synth":
+        from ..comm import schedules  # lazy: repro.comm pulls in jax
+
+        if op in schedules.SYNTH_OPS:
+            return schedules.synthesized_time(
+                cl.graph, op, unit_bytes, model=cl.link, rt=cl.routing()).time
     return C.collective_time(cl.graph, op, unit_bytes, model=cl.link, rt=cl.routing()).time
 
 
@@ -215,7 +231,7 @@ def graph500(cl: Cluster, scale: int = 27, edgefactor: int = 16, op: str = "bfs"
     levels = max(int(math.log2(nvert) * 0.75), 8)  # Kronecker graphs: shallow BFS
     chunk = total_bytes / levels / (n * n)
     t_level_a2a = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link, rt=cl.routing()).time
-    t_level_sync = C.collective_time(cl.graph, "allreduce_recdbl" if (n & (n - 1)) == 0 else "allreduce",
+    t_level_sync = C.collective_time(cl.graph, C.default_allreduce(n),
                                      8.0, model=cl.link, rt=cl.routing()).time
     # local edge inspection is memory-bound: ~16 B per edge over local share
     t_mem = revisit * nedge * 16.0 / n / cl.mem_bw

@@ -91,6 +91,8 @@ class SearchResult:
     evals_full: int = 0  # full-recompute fallbacks
     offsets: tuple[int, ...] | None = None  # circulant offsets, if applicable
     compound_steps: int = 0  # multi-orbit proposals priced (moves_per_step > 1)
+    objective_value: float | None = None  # non-MPL objective score (e.g.
+    # synthesized collective-schedule seconds for objective="collective-time")
 
     @property
     def mpl_gap(self) -> float:

@@ -19,6 +19,12 @@ facade over both):
   → parallel-replica SA at n <= 64 → the circulant+polish large tier), so
   the legacy driver is now a thin, trajectory-identical shim over
   :func:`search`.
+- the **objective registry**: what the search *minimises*.  ``mpl`` (the
+  paper's objective) is handled natively by every strategy tier; other
+  objectives (``collective-time`` built in) register an adapter that owns
+  the whole run, and ``search()`` dispatches to it before any strategy
+  resolution — so new objectives are a spec field plus one
+  :func:`register_objective` call, not a new entry point.
 
 Contract: ``search(SearchSpec(n, k, strategy=X, budget=B, seed=S, ...))`` is
 byte-identical per seed to the legacy ``find_optimal(n, k, method=X,
@@ -41,6 +47,10 @@ __all__ = [
     "register_strategy",
     "search_strategies",
     "resolve_strategy",
+    "Objective",
+    "register_objective",
+    "objective_names",
+    "resolve_objective",
     "search",
 ]
 
@@ -150,11 +160,12 @@ class SearchSpec:
     for the exhaustive tier, the two-stage budget for ``large``).
 
     ``strategy="auto"`` resolves by N-tier exactly like the legacy
-    ``find_optimal`` driver; ``objective`` currently must be ``"mpl"`` (the
-    paper's objective) and exists so future objectives are a spec field, not
-    a new entry point.  The reserved ``graph_name`` param renames the result
-    graph after the run (how the auto-SA tier pins its ``(n,k)-Optimal``
-    naming without a special case in the strategy).
+    ``find_optimal`` driver; ``objective`` names an entry in the objective
+    registry (``"mpl"`` — the paper's objective, handled natively by every
+    strategy tier — or ``"collective-time"``, which owns its own run; see
+    :func:`register_objective`).  The reserved ``graph_name`` param renames
+    the result graph after the run (how the auto-SA tier pins its
+    ``(n,k)-Optimal`` naming without a special case in the strategy).
     """
 
     n: int
@@ -175,6 +186,8 @@ class SearchSpec:
         # legacy find_optimal alias, honoured everywhere specs are built
         strategy = {"symmetric": "symmetric-sa"}.get(strategy, strategy)
         object.__setattr__(self, "strategy", strategy)
+        object.__setattr__(
+            self, "objective", str(self.objective or "mpl").replace("_", "-"))
         object.__setattr__(self, "params", _params_tuple(self.params))
         object.__setattr__(self, "seed", int(self.seed))
         for f in ("budget", "fold", "replicas"):  # numpy ints -> python ints
@@ -255,6 +268,67 @@ def get_strategy(name: str) -> SearchStrategy:
     return strat
 
 
+# --------------------------------------------------------------------------------
+# Objective registry — what the search minimises.  ``mpl`` is the native
+# objective every strategy tier understands; any other registered objective
+# carries its own run adapter and ``search()`` dispatches to it *instead of*
+# strategy resolution (the adapter owns budget/seed semantics).
+# --------------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """One registered search objective: a name, an optional adapter that owns
+    the whole run for a :class:`SearchSpec` (``None`` means the strategy tiers
+    minimise it natively, i.e. ``mpl``), and a doc line for the registry
+    tables in docs/ARCHITECTURE.md."""
+
+    name: str
+    run: Callable[[SearchSpec], "Any"] | None = None
+    doc: str = ""
+
+
+_OBJECTIVES: dict[str, Objective] = {}
+
+#: registered objective names, in registration order (extended live by
+#: :func:`register_objective`, so out-of-tree objectives resolve like the
+#: built-ins)
+OBJECTIVES: tuple[str, ...] = ()
+
+
+def register_objective(name: str, run: Callable | None = None,
+                       doc: str = "") -> Objective:
+    """Register (or replace) a search objective under ``name``.
+
+    ``run=None`` marks a native objective: the strategy tiers minimise it
+    themselves and :func:`search` goes through strategy resolution as usual.
+    A non-None ``run`` owns the whole search for its spec and must return a
+    ``SearchResult``.
+    """
+    global OBJECTIVES
+    obj = Objective(name=name, run=run, doc=doc)
+    _OBJECTIVES[name] = obj
+    if name not in OBJECTIVES:
+        OBJECTIVES = OBJECTIVES + (name,)
+    return obj
+
+
+def objective_names() -> tuple[str, ...]:
+    """Registered objective names (the validation universe for ``objective=``)."""
+    return OBJECTIVES
+
+
+def get_objective(name: str) -> Objective:
+    obj = _OBJECTIVES.get(str(name).replace("_", "-"))
+    if obj is None:
+        raise ValueError(f"objective={name!r} must be one of {OBJECTIVES}")
+    return obj
+
+
+def resolve_objective(spec: SearchSpec) -> Objective:
+    """Validate ``spec.objective`` against the registry → :class:`Objective`."""
+    return get_objective(spec.objective)
+
+
 def resolve_strategy(spec: SearchSpec) -> SearchSpec:
     """Validate ``spec`` and resolve ``strategy="auto"`` by N-tier.
 
@@ -265,10 +339,7 @@ def resolve_strategy(spec: SearchSpec) -> SearchSpec:
     """
     from . import engines  # lazy: keep spec construction import-light
 
-    if spec.objective != "mpl":
-        raise ValueError(
-            f"objective={spec.objective!r} is not supported: the paper's "
-            "searches minimise 'mpl' (register a strategy for new objectives)")
+    resolve_objective(spec)  # loud ValueError on unknown objectives
     if spec.engine in engines.CIRCULANT_ENGINES and \
             spec.engine not in engines.ROWS_ENGINES:
         pass  # circulant-only pricer ("jax"): the tier probes availability
@@ -287,14 +358,20 @@ def resolve_strategy(spec: SearchSpec) -> SearchSpec:
 def search(spec: SearchSpec):
     """Run the search a :class:`SearchSpec` describes → ``SearchResult``.
 
-    This is the single paper-facing dispatch: strategy names are validated
-    against the registry, ``auto`` resolves by N-tier, and the selected
-    adapter maps the spec onto its tier's entry point with the exact legacy
-    defaults — so ``search(spec)`` reproduces the corresponding
-    ``find_optimal(method=...)`` trajectory bit-for-bit per seed.
+    This is the single paper-facing dispatch: the objective resolves first
+    (a non-native objective's adapter owns the whole run); otherwise strategy
+    names are validated against the registry, ``auto`` resolves by N-tier,
+    and the selected adapter maps the spec onto its tier's entry point with
+    the exact legacy defaults — so ``search(spec)`` with ``objective="mpl"``
+    reproduces the corresponding ``find_optimal(method=...)`` trajectory
+    bit-for-bit per seed.
     """
-    spec = resolve_strategy(spec)
-    res = get_strategy(spec.strategy).run(spec)
+    obj = resolve_objective(spec)
+    if obj.run is not None:
+        res = obj.run(spec)
+    else:
+        spec = resolve_strategy(spec)
+        res = get_strategy(spec.strategy).run(spec)
     name = spec.kwargs.get("graph_name")
     if name:
         res.graph = res.graph.with_name(str(name))
@@ -404,3 +481,64 @@ register_strategy(
     "large", _run_large,
     "pinned-or-searched circulant warm start + orbit-SA polish (replica-sharded "
     "when replicas > 1)")
+
+
+# --------------------------------------------------------------------------------
+# Built-in objectives.  ``mpl`` is native (the strategy tiers minimise it
+# themselves); ``collective-time`` closes the paper's co-design loop — SA over
+# edge swaps scoring each candidate graph by its *synthesized* collective
+# schedule time on the netsim cluster (repro.comm.schedules).
+# --------------------------------------------------------------------------------
+
+def _run_collective_time(spec: SearchSpec):
+    """SA edge-swap search minimising synthesized collective-schedule time.
+
+    Spec params: ``op`` (default ``"allreduce"``, any ``schedules.SYNTH_OPS``
+    member), ``unit_bytes`` (default 256 KiB — latency/bandwidth mixed regime
+    where schedule structure matters), ``model`` is the netsim TAISHAN link.
+    The SA score is the synthesized time normalised by the ring baseline (so
+    the legacy temperature schedule transfers), plus a tiny (1e-3) mean-of-
+    candidates guidance term that gives the annealer gradient across the
+    flat ring plateau without ever distorting which graph wins.
+    """
+    from . import collectives as C, metrics, search as search_mod
+    from .graphs import ring
+    from .routing import RoutingTable
+    from ..comm import schedules
+
+    kw = spec.kwargs
+    op = str(kw.get("op", "allreduce"))
+    unit = float(kw.get("unit_bytes", 1 << 18))
+    if op not in schedules.SYNTH_OPS:
+        raise ValueError(
+            f"op={op!r} must be one of {sorted(schedules.SYNTH_OPS)}")
+    base = schedules.synthesize(ring(spec.n), op, unit).time
+
+    def score(g) -> float:
+        syn = schedules.synthesize(g, op, unit, rt=RoutingTable.build(g))
+        guide = sum(syn.candidates.values()) / max(len(syn.candidates), 1) \
+            if syn.candidates else syn.time
+        return (syn.time + 1e-3 * guide) / base
+
+    g = search_mod.sa_objective_search(
+        spec.n, spec.k, score, seed=spec.seed, n_iter=spec.budget or 600)
+    if "graph_name" not in kw:
+        g = g.with_name(f"({spec.n},{spec.k})-CollectiveOpt")
+    syn = schedules.synthesize(g, op, unit, rt=RoutingTable.build(g))
+    mpl, diam = search_mod._graph_mpl_d(g)
+    return search_mod.SearchResult(
+        graph=g, mpl=mpl, diameter=diam,
+        mpl_lb=metrics.mpl_lower_bound(spec.n, spec.k),
+        d_lb=metrics.diameter_lower_bound(spec.n, spec.k),
+        iterations=spec.budget or 600, accepted=0, history=[syn.time],
+        objective_value=syn.time)
+
+
+register_objective(
+    "mpl", None,
+    "mean path length — the paper's objective, minimised natively by every "
+    "strategy tier")
+register_objective(
+    "collective-time", _run_collective_time,
+    "synthesized collective-schedule time on the netsim cluster "
+    "(sa_objective_search over repro.comm.schedules)")

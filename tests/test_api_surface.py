@@ -26,9 +26,12 @@ API_SURFACE = (
     "search_strategies",
     "engine_names",
     "workload_names",
+    "objective_names",
     "register_topology",
     "register_strategy",
     "register_workload",
+    "register_objective",
+    "main",
 )
 
 TOPOLOGY_FAMILIES = (
@@ -61,11 +64,17 @@ SEARCH_STRATEGIES = (
 ROWS_ENGINES = ("c", "numpy", "bitset", "pallas")
 CIRCULANT_ENGINES = ("numpy", "jax")
 
+OBJECTIVES = (
+    "mpl",
+    "collective-time",
+)
+
 WORKLOADS = (
     "stats",
     "pingpong_fit",
     "pingpong_mean",
     "collective",
+    "collective_synth",
     "alltoall",
     "beff",
     "ffte",
@@ -103,6 +112,11 @@ def test_engine_name_snapshot():
 
 def test_workload_snapshot():
     assert api.workload_names() == WORKLOADS
+
+
+def test_objective_snapshot():
+    assert specs.objective_names() == OBJECTIVES
+    assert api.objective_names() == OBJECTIVES
 
 
 def test_paper_suite_snapshot():

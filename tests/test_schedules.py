@@ -1,0 +1,277 @@
+"""Schedule synthesis (repro.comm.schedules): structural properties of the
+BFS-expansion trees, bitwise-correct allreduce execution against a naive
+reference, the objective registry, the `collective-time` search, and the
+`python -m repro.api` CLI."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.comm import schedules as S
+from repro.core import collectives as C
+from repro.core import graphs, netsim, specs
+from repro.core.routing import RoutingTable
+from repro.core.specs import SearchSpec
+
+
+def _suite():
+    gs = [graphs.ring(12), graphs.wagner(16), graphs.torus((4, 4)),
+          graphs.hypercube(4), graphs.petersen()]
+    gs += [graphs.random_regular(16, 4, seed=s) for s in range(3)]
+    gs.append(graphs.random_regular(18, 4, seed=5))
+    return gs
+
+
+def exec_bcast(sched: C.Schedule, root: int) -> set[int]:
+    have = {root}
+    for rnd in sched.rounds:
+        got = {t.dst for t in rnd if t.src in have}
+        have |= got
+    return have
+
+
+# ------------------------------------------------------------------------------
+# Spanning-tree properties (the ISSUE's property tests)
+# ------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g", _suite(), ids=lambda g: g.name)
+def test_bcast_tree_reaches_all_nodes_link_disjoint(g):
+    edges = set(g.edges)
+    for root in (0, g.n // 2, g.n - 1):
+        sched = S.tree_bcast(g, 1.0, root)
+        # reaches every node
+        assert exec_bcast(sched, root) == set(range(g.n))
+        informed = {root}
+        for rnd in sched.rounds:
+            links = [(t.src, t.dst) for t in rnd]
+            # no directed link used twice in a step
+            assert len(links) == len(set(links))
+            for t in rnd:
+                # every transfer rides a real graph edge (1 hop) from an
+                # already-informed node
+                assert (min(t.src, t.dst), max(t.src, t.dst)) in edges
+                assert t.src in informed
+            informed |= {t.dst for t in rnd}
+        # each non-root node informed exactly once
+        dsts = [t.dst for rnd in sched.rounds for t in rnd]
+        assert sorted(dsts) == sorted(set(range(g.n)) - {root})
+
+
+@pytest.mark.parametrize("g", _suite()[:4], ids=lambda g: g.name)
+def test_reduce_and_gather_mirror_their_forward_ops(g):
+    tree = S.bfs_tree(g, 0)
+    bc, red = S.tree_bcast(g, 1.0, 0, tree), S.tree_reduce(g, 1.0, 0, tree)
+    assert [sorted((t.dst, t.src) for t in rnd) for rnd in red.rounds] == \
+        [sorted((t.src, t.dst) for t in rnd) for rnd in reversed(bc.rounds)]
+    sc, ga = S.tree_scatter(g, 1.0, 0, tree), S.tree_gather(g, 1.0, 0, tree)
+    assert [sorted((t.dst, t.src, t.nbytes) for t in rnd) for rnd in ga.rounds] == \
+        [sorted((t.src, t.dst, t.nbytes) for t in rnd)
+         for rnd in reversed(sc.rounds)]
+
+
+def test_scatter_sizes_subtrees(g=graphs.torus((4, 4))):
+    tree = S.bfs_tree(g, 0)
+    size = tree.subtree_sizes()
+    sched = S.tree_scatter(g, 3.0, 0, tree)
+    for rnd in sched.rounds:
+        for t in rnd:
+            assert t.nbytes == size[t.dst] * 3.0
+    # the root ships everything except its own chunk exactly once
+    root_bytes = sum(t.nbytes for rnd in sched.rounds for t in rnd
+                     if t.src == 0)
+    assert root_bytes == (g.n - 1) * 3.0
+
+
+def test_bfs_tree_rejects_disconnected():
+    g = graphs.from_edges(4, [(0, 1), (2, 3)], "split")
+    with pytest.raises(ValueError, match="disconnected"):
+        S.bfs_tree(g, 0)
+
+
+# ------------------------------------------------------------------------------
+# Allreduce: bitwise-correct against the naive reference
+# ------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g", _suite(), ids=lambda g: g.name)
+def test_allreduce_bitwise_correct(g):
+    rng = np.random.default_rng(g.n * 31 + 7)
+    values = rng.integers(-1000, 1000, size=(g.n, 61)).astype(np.int64)
+    want = values.sum(axis=0)
+    rt = RoutingTable.build(g)
+    # the selected synthesis AND every structurally applicable candidate
+    cands = S.allreduce_candidates(g, 4096.0)
+    assert "tree" in cands  # the always-applicable fallback
+    for name, (sched, meta) in cands.items():
+        synth = S.SynthesizedCollective(
+            op="allreduce", algorithm=name, schedule=sched,
+            report=C.simulate(sched, rt, C.TAISHAN_LINK), candidates={},
+            order=meta.get("order"), tree=meta.get("tree"))
+        out = S.execute_allreduce(synth, values)
+        assert (out == want).all(), f"{g.name}:{name}"
+    picked = S.synthesize(g, "allreduce", 4096.0, rt=rt)
+    assert picked.algorithm in cands
+    assert picked.time == min(picked.candidates.values())
+    assert (S.execute_allreduce(picked, values) == want).all()
+    # 1-D input (one scalar per node) round-trips through the same movement
+    flat = np.arange(g.n, dtype=np.int64)
+    out = S.execute_allreduce(picked, flat)
+    assert out.shape == (g.n,) and (out == flat.sum()).all()
+
+
+def test_allreduce_structure_selection():
+    # hypercube: XOR partners are 1-hop, halving-doubling wins the
+    # latency/bandwidth mixed regime
+    syn = S.synthesize(graphs.hypercube(4), "allreduce", float(1 << 18))
+    assert syn.algorithm == "halving-doubling"
+    # big messages on the plain ring: the bandwidth-optimal ring schedule
+    syn = S.synthesize(graphs.ring(16), "allreduce", float(1 << 20))
+    assert syn.algorithm == "ring"
+    assert syn.order is not None
+    # Petersen: not Hamiltonian (famously), not power-of-two -> tree fallback
+    syn = S.synthesize(graphs.petersen(), "allreduce", 4096.0)
+    assert syn.algorithm == "tree" and list(syn.candidates) == ["tree"]
+
+
+def test_synthesize_rejects_unknown_op():
+    with pytest.raises(ValueError, match="synthesized form"):
+        S.synthesize(graphs.ring(8), "alltoall", 1.0)
+
+
+def test_synthesized_time_root_averages():
+    g = graphs.torus((4, 4))
+    rep = S.synthesized_time(g, "bcast", 1024.0)
+    per_root = [S.synthesize(g, "bcast", 1024.0, root=r).time
+                for r in range(g.n)]
+    assert rep.time == pytest.approx(float(np.mean(per_root)))
+    assert rep.schedule.endswith("-rootavg")
+
+
+def test_collective_bench_schedule_modes():
+    cl = netsim.TAISHAN(graphs.torus((4, 4)))
+    legacy = netsim.collective_bench(cl, "allreduce", float(1 << 18))
+    synth = netsim.collective_bench(cl, "allreduce", float(1 << 18),
+                                    schedule="synth")
+    assert synth == S.synthesized_time(cl.graph, "allreduce", float(1 << 18),
+                                       model=cl.link, rt=cl.routing()).time
+    assert synth < legacy  # the co-design claim on the torus
+    # ops outside SYNTH_OPS fall back to the legacy model
+    assert netsim.collective_bench(cl, "alltoall", 1024.0, schedule="synth") \
+        == netsim.collective_bench(cl, "alltoall", 1024.0)
+    with pytest.raises(ValueError, match="schedule"):
+        netsim.collective_bench(cl, "allreduce", 1024.0, schedule="bogus")
+
+
+def test_default_allreduce_selection():
+    assert C.default_allreduce(16) == "allreduce_recdbl"
+    assert C.default_allreduce(12) == "allreduce"
+    assert C.default_allreduce(1) == "allreduce"
+
+
+# ------------------------------------------------------------------------------
+# Objective registry + the collective-time search
+# ------------------------------------------------------------------------------
+
+def test_objective_registry_surface():
+    assert specs.objective_names() == ("mpl", "collective-time")
+    assert api.objective_names() == specs.objective_names()
+    with pytest.raises(ValueError, match="objective"):
+        specs.get_objective("latency")
+    # unknown objectives list the known names
+    with pytest.raises(ValueError, match="collective-time"):
+        api.search(SearchSpec(n=16, k=4, objective="nope"))
+    # underscore alias normalises like strategy names do
+    assert SearchSpec(n=16, k=4, objective="collective_time").objective == \
+        "collective-time"
+
+
+def test_register_objective_extensible():
+    calls = []
+
+    def run_probe(spec):
+        calls.append(spec)
+        return specs._run_pinned(spec)
+
+    specs.register_objective("test-probe-objective", run_probe)
+    try:
+        res = api.search(SearchSpec.make(16, 4, objective="test-probe-objective"))
+        assert res.graph.n == 16 and len(calls) == 1
+        assert "test-probe-objective" in specs.objective_names()
+    finally:
+        # registry hygiene: drop the probe so the surface snapshot stays exact
+        specs._OBJECTIVES.pop("test-probe-objective")
+        specs.OBJECTIVES = tuple(
+            o for o in specs.OBJECTIVES if o != "test-probe-objective")
+
+
+def test_collective_time_search_deterministic_per_seed():
+    spec = SearchSpec.make(16, 4, objective="collective-time", budget=60,
+                           seed=0)
+    r1, r2 = api.search(spec), api.search(spec)
+    assert r1.graph.edges == r2.graph.edges
+    assert r1.objective_value == r2.objective_value > 0
+    assert r1.graph.name == "(16,4)-CollectiveOpt"
+    # the spec round-trips through JSON to the same search
+    r3 = api.search(SearchSpec.from_json(spec.to_json()))
+    assert r3.graph.edges == r1.graph.edges
+
+
+def test_collective_time_beats_mpl_ring_schedule():
+    """ISSUE acceptance: the collective-time search's synthesized allreduce
+    beats the same-budget mpl result's ring schedule."""
+    budget, unit = 150, 1 << 18
+    res = api.search(SearchSpec.make(16, 4, objective="collective-time",
+                                     budget=budget, seed=0))
+    mpl_res = api.search(SearchSpec.make(16, 4, objective="mpl",
+                                         budget=budget, seed=0))
+    ring_time = S.allreduce_candidates(mpl_res.graph, float(unit))
+    rt = RoutingTable.build(mpl_res.graph)
+    ring_time = C.simulate(ring_time["ring"][0], rt, C.TAISHAN_LINK).time
+    assert res.objective_value < ring_time
+    # mpl path untouched by the registry: no objective_value, legacy naming
+    assert mpl_res.objective_value is None
+    assert mpl_res.graph.name == "(16,4)-Optimal"
+
+
+# ------------------------------------------------------------------------------
+# CLI: python -m repro.api
+# ------------------------------------------------------------------------------
+
+def test_cli_runs_spec_file(tmp_path):
+    spec = {
+        "topologies": {
+            "(16,4)-Ring": "ring:16",
+            "Torus:4x4": {"family": "torus", "params": {"dims": [4, 4]}},
+        },
+        "workloads": [
+            ["collective", {"op": "allreduce", "unit_bytes": 1 << 18}],
+            ["collective_synth", {"op": "allreduce", "unit_bytes": 1 << 18}],
+        ],
+    }
+    sf = tmp_path / "spec.json"
+    sf.write_text(json.dumps(spec))
+    out = tmp_path / "out.json"
+    assert api.main([str(sf), "-o", str(out)]) == 0
+    d = json.loads(out.read_text())
+    assert d["names"] == ["(16,4)-Ring", "Torus:4x4"]
+    assert d["provenance"]["Torus:4x4"]["family"] == "torus"
+    torus = d["values"]["Torus:4x4"]
+    # synthesized schedule beats the legacy rank-space model on the torus
+    assert torus["collective_synth"] < torus["collective"]
+    assert "Torus:4x4" in d["table"]
+
+
+def test_cli_suite_shorthand(tmp_path, capsys):
+    sf = tmp_path / "spec.json"
+    sf.write_text(json.dumps({"suite": "16", "workloads": ["stats"]}))
+    assert api.main([str(sf)]) == 0
+    d = json.loads(capsys.readouterr().out)
+    assert "(16,4)-Optimal" in d["names"]
+    assert d["provenance"]["(16,4)-Optimal"]["family"] == "optimal"
+
+
+def test_cli_rejects_empty_spec(tmp_path):
+    sf = tmp_path / "spec.json"
+    sf.write_text("{}")
+    with pytest.raises(SystemExit, match="topologies"):
+        api.main([str(sf)])
