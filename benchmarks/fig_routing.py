@@ -1,0 +1,91 @@
+"""Routing-tier benchmark: static vs congestion-aware adaptive routing.
+
+The paper's torus congestion collapse on alltoall (§4.2.2) is a *static
+single-path* artifact: Floyd routing concentrates all-to-all flows on a few
+links.  This module prices the same topologies under both routing tiers —
+``routing="static"`` (the paper's model) and ``routing="adaptive"`` (minimal
+multipath weighted by the EWMA congestion score, ``repro.core.routing``) —
+across the classic synthetic sweeps (uniform / transpose / shift / hotspot,
+``repro.core.traffic``) and the torus alltoall collective itself.
+
+Besides the CSV rows this emits ``results/benchmarks/BENCH_routing.json``;
+the CI bench-smoke job asserts the ``torus_alltoall`` row's
+``adaptive_vs_static > 1`` (adaptive must relieve the torus congestion
+collapse).  Row schema in docs/BENCHMARKS.md.
+"""
+import dataclasses
+import json
+import os
+import time
+
+from repro import api
+from repro.core import netsim
+
+from . import common
+
+#: (display key, spec) — constructive families only, so the module is
+#: seconds-fast and runs in the CI smoke subset
+TOPOLOGIES = (
+    ("ring32", "ring:32"),
+    ("torus4x8", "torus:4x8"),
+    ("chvatal32", "chvatal32"),
+    ("clusterhub4x8", "cluster-hub:4x8"),
+)
+
+PATTERNS = ("uniform", "transpose", "shift", "hotspot")
+NBYTES = 1 << 20
+SEED = 0
+
+
+def _clusters(graph):
+    cl = netsim.TAISHAN(graph)
+    return cl, dataclasses.replace(cl, routing="adaptive")
+
+
+def run() -> common.Rows:
+    rows = common.Rows("fig_routing")
+    results = []
+    for key, spec_str in TOPOLOGIES:
+        spec = api.parse_topology(spec_str)
+        g = api.build_topology(spec)
+        cl_s, cl_a = _clusters(g)
+        for pattern in PATTERNS:
+            t0 = time.perf_counter()
+            s = netsim.traffic_time(cl_s, pattern, NBYTES, seed=SEED)
+            a = netsim.traffic_time(cl_a, pattern, NBYTES, seed=SEED)
+            wall = time.perf_counter() - t0
+            ratio = s / a
+            rows.add(f"{pattern}/{key}", wall,
+                     f"static={s:.3g}s adaptive={a:.3g}s ratio={ratio:.3f}")
+            results.append({
+                "key": f"{pattern}_{key}", "topology": g.name,
+                "pattern": pattern, "nbytes": NBYTES, "seed": SEED,
+                "static_s": s, "adaptive_s": a,
+                "adaptive_vs_static": round(ratio, 4),
+                "spec": json.loads(spec.to_json()),
+            })
+
+    # the congestion-collapse row the CI smoke job asserts on: the paper's
+    # 32-node torus alltoall, static vs adaptive
+    spec = api.parse_topology("torus:4x8")
+    g = api.build_topology(spec)
+    cl_s, cl_a = _clusters(g)
+    t0 = time.perf_counter()
+    s = netsim.collective_bench(cl_s, "alltoall", NBYTES)
+    a = netsim.collective_bench(cl_a, "alltoall", NBYTES)
+    wall = time.perf_counter() - t0
+    rows.add("torus_alltoall", wall,
+             f"static={s:.3g}s adaptive={a:.3g}s ratio={s / a:.3f}")
+    results.append({
+        "key": "torus_alltoall", "topology": g.name,
+        "pattern": "alltoall", "nbytes": NBYTES, "seed": SEED,
+        "static_s": s, "adaptive_s": a,
+        "adaptive_vs_static": round(s / a, 4),
+        "spec": json.loads(spec.to_json()),
+    })
+
+    out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_routing.json"), "w") as f:
+        json.dump({"results": results}, f, indent=1)
+    return rows

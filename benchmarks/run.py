@@ -16,7 +16,7 @@ if __package__ in (None, ""):  # executed as a script: bootstrap the paths
 
 from benchmarks import (bench_search, fig2_pingpong, fig3_pingpong_ratios,
                         fig4_collectives, fig5_beff, fig6_ffte, fig7_graph500,
-                        fig8_npb, fig10_large_sim, roofline,
+                        fig8_npb, fig10_large_sim, fig_routing, roofline,
                         table1_graph_properties, table2_3_dragonfly,
                         table4_large_scale, table5_6_large_dragonfly,
                         topology_term)
@@ -34,6 +34,7 @@ MODULES = {
     "table4": table4_large_scale,
     "table5_6": table5_6_large_dragonfly,
     "fig10": fig10_large_sim,
+    "fig_routing": fig_routing,
     "roofline": roofline,
     "topology_term": topology_term,
     "bench_search": bench_search,
@@ -41,8 +42,9 @@ MODULES = {
 
 # fast, dependency-light subset for the CI bench-smoke job (bench_search
 # additionally honours smoke=True with reduced budgets; fig4 emits the
-# spec-embedded BENCH_fig4.json rows in seconds)
-SMOKE_KEYS = ["bench_search", "fig4"]
+# spec-embedded BENCH_fig4.json rows in seconds; fig_routing the static-vs-
+# adaptive BENCH_routing.json rows the smoke job asserts on)
+SMOKE_KEYS = ["bench_search", "fig4", "fig_routing"]
 
 
 def main(argv=None) -> int:

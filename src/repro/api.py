@@ -189,6 +189,9 @@ register_workload("graph500",
 register_workload("npb",
                   lambda g, cl, kernel="is", klass="A", **kw:
                   netsim.npb(cl, kernel, klass, **kw))
+register_workload("traffic",
+                  lambda g, cl, pattern="uniform", nbytes=1 << 20, **kw:
+                  netsim.traffic_time(cl, pattern, float(nbytes), **kw))
 
 
 # --------------------------------------------------------------------------------
@@ -285,6 +288,7 @@ def run_experiment(
     cache_dir: str | None = None,
     cluster_factory: Callable[[Graph], "netsim.Cluster"] = netsim.TAISHAN,
     engine: str | None = None,
+    routing: str | None = None,
 ) -> ExperimentResult:
     """Price a suite of topologies through the simulated cluster workloads.
 
@@ -302,8 +306,10 @@ def run_experiment(
     ``(name, params)`` pairs, or ``(key, name, params)`` triples when the
     same workload runs twice with different params.  A routed cluster
     (``cluster_factory``, default the paper's TAISHAN model) is built
-    lazily, only when some workload needs one.  Every cell is timed;
-    values, wall seconds, graphs, and provenance specs come back in an
+    lazily, only when some workload needs one.  ``routing=`` forwards the
+    routing tier (``"static"`` / ``"adaptive"``) onto every built cluster,
+    overriding whatever the factory set.  Every cell is timed; values,
+    wall seconds, graphs, and provenance specs come back in an
     :class:`ExperimentResult`.
     """
     if engine in engines.CIRCULANT_ENGINES and engine not in engines.ROWS_ENGINES:
@@ -354,6 +360,8 @@ def run_experiment(
     for n in names:
         g = graphs_out[n]
         cl = cluster_factory(g) if needs_cluster else None
+        if cl is not None and routing is not None:
+            cl = dataclasses.replace(cl, routing=routing)
         for key, wname, params in wl:
             fn = _WORKLOADS[wname]
             t0 = time.perf_counter()
@@ -390,7 +398,7 @@ def main(argv: list[str] | None = None) -> int:
     legacy ``family:args`` string, or a plain list of either), plus
     ``"workloads"`` (registry names, ``[name, params]`` pairs, or
     ``{"workload": name, ...params}`` dicts) and optional ``"engine"`` /
-    ``"cache_dir"``.  The result JSON carries names, values, wall seconds,
+    ``"cache_dir"`` / ``"routing"`` (``"static"`` / ``"adaptive"``).  The result JSON carries names, values, wall seconds,
     provenance specs, and the plain-text table.
     """
     import argparse
@@ -419,7 +427,8 @@ def main(argv: list[str] | None = None) -> int:
     workloads = [tuple(w) if isinstance(w, list) else w
                  for w in d.get("workloads") or ["stats"]]
     exp = run_experiment(topologies, workloads=workloads,
-                         engine=d.get("engine"), cache_dir=d.get("cache_dir"))
+                         engine=d.get("engine"), cache_dir=d.get("cache_dir"),
+                         routing=d.get("routing"))
     out = {"names": exp.names, "values": exp.values, "seconds": exp.seconds,
            "provenance": exp.provenance(), "table": exp.table()}
     text = json.dumps(out, indent=2, sort_keys=True, default=_json_default)

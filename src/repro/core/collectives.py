@@ -39,7 +39,8 @@ from typing import Callable, Iterable, Sequence
 import numpy as np
 
 from .graphs import Graph
-from .routing import RoutingTable
+from .routing import (AdaptiveConfig, DEFAULT_ADAPTIVE, RoutingTable,
+                      adaptive_link_loads)
 
 __all__ = [
     "LinkModel",
@@ -149,28 +150,62 @@ class CollectiveReport:
         )
 
 
-def simulate(schedule: Schedule, rt: RoutingTable, model: LinkModel) -> CollectiveReport:
-    """Cost a schedule on a routed topology with the α–β + contention model."""
+def simulate(schedule: Schedule, rt: RoutingTable, model: LinkModel,
+             routing: str = "static",
+             adaptive: AdaptiveConfig | None = None) -> CollectiveReport:
+    """Cost a schedule on a routed topology with the α–β + contention model.
+
+    ``routing`` picks the routing tier the serialization term is computed
+    under: ``"static"`` walks each transfer over its one fixed Floyd path
+    (the paper's model, byte-identical to the historical behaviour);
+    ``"adaptive"`` splits each transfer across its minimal next-hop
+    candidates weighted by the EWMA congestion score of
+    :func:`repro.core.routing.adaptive_link_loads`, with the occupancy
+    state carried across the schedule's rounds.  The latency term is
+    identical in both tiers (adaptive routes only over minimal paths).
+    ``adaptive`` overrides the default :class:`AdaptiveConfig`; a zero
+    ``gamma`` (congestion sensitivity off) is the static tier by
+    definition, so that case short-circuits to the static branch exactly.
+    """
+    if routing not in ("static", "adaptive"):
+        raise ValueError(f"routing={routing!r} must be 'static' or 'adaptive'")
+    cfg = adaptive if adaptive is not None else DEFAULT_ADAPTIVE
+    if routing == "adaptive" and cfg.gamma == 0.0:
+        routing = "static"
     schedule.validate()
     lat_total = 0.0
     ser_total = 0.0
     max_link = 0.0
     wire = 0.0
+    ewma_state = None
     for rnd in schedule.rounds:
         if not rnd:
             continue
         lat = 0.0
-        loads: dict[tuple[int, int], float] = {}
-        for t in rnd:
-            h = rt.dist[t.src, t.dst]
-            if not np.isfinite(h):
-                raise ValueError(f"no route {t.src}->{t.dst}")
-            lat = max(lat, model.t0 + model.alpha * float(h))
-            for link in rt.path_links(t.src, t.dst):
-                loads[link] = loads.get(link, 0.0) + t.nbytes
-                wire += t.nbytes
-        ser = max(loads.values()) / model.bw if loads else 0.0
-        max_link = max(max_link, max(loads.values()) if loads else 0.0)
+        if routing == "adaptive":
+            for t in rnd:
+                h = rt.dist[t.src, t.dst]
+                if not np.isfinite(h):
+                    raise ValueError(f"no route {t.src}->{t.dst}")
+                lat = max(lat, model.t0 + model.alpha * float(h))
+            loads_arr, ewma_state = adaptive_link_loads(
+                rt, [(t.src, t.dst, t.nbytes) for t in rnd], cfg, ewma_state)
+            peak = float(loads_arr.max()) if loads_arr.size else 0.0
+            wire += float(loads_arr.sum())
+            ser = peak / model.bw
+            max_link = max(max_link, peak)
+        else:
+            loads: dict[tuple[int, int], float] = {}
+            for t in rnd:
+                h = rt.dist[t.src, t.dst]
+                if not np.isfinite(h):
+                    raise ValueError(f"no route {t.src}->{t.dst}")
+                lat = max(lat, model.t0 + model.alpha * float(h))
+                for link in rt.path_links(t.src, t.dst):
+                    loads[link] = loads.get(link, 0.0) + t.nbytes
+                    wire += t.nbytes
+            ser = max(loads.values()) / model.bw if loads else 0.0
+            max_link = max(max_link, max(loads.values()) if loads else 0.0)
         lat_total += lat
         ser_total += ser
     return CollectiveReport(
@@ -371,18 +406,23 @@ def collective_time(
     model: LinkModel = TAISHAN_LINK,
     rt: RoutingTable | None = None,
     root: int | None = None,
+    routing: str = "static",
+    adaptive: AdaptiveConfig | None = None,
     **kw,
 ) -> CollectiveReport:
     """Cost collective ``op`` with per-rank payload ``nbytes`` on graph ``g``.
 
     For rooted collectives (bcast/reduce/scatter/gather) the paper averages
     over all roots; pass root=None to reproduce that averaging.
+    ``routing``/``adaptive`` select the routing tier (see :func:`simulate`).
     """
     rt = rt or RoutingTable.build(g)
     fn = ALGORITHMS[op]
     rooted = op in ("bcast", "reduce", "scatter", "gather")
     if rooted and root is None:
-        reps = [simulate(fn(g.n, nbytes, root=r, **kw), rt, model) for r in range(g.n)]
+        reps = [simulate(fn(g.n, nbytes, root=r, **kw), rt, model,
+                         routing=routing, adaptive=adaptive)
+                for r in range(g.n)]
         t = float(np.mean([r_.time for r_ in reps]))
         base = reps[0]
         return CollectiveReport(
@@ -397,4 +437,4 @@ def collective_time(
         )
     args = {"root": root} if rooted else {}
     sched = fn(g.n, nbytes, **args, **kw)
-    return simulate(sched, rt, model)
+    return simulate(sched, rt, model, routing=routing, adaptive=adaptive)

@@ -35,6 +35,8 @@ __all__ = [
     "dragonfly",
     "random_regular",
     "random_hamiltonian_regular",
+    "nested_compose",
+    "cluster_hub",
     "build",
     "REGISTRY",
 ]
@@ -408,6 +410,69 @@ def random_hamiltonian_regular(n: int, k: int, seed: int = 0, max_tries: int = 5
         if g.is_regular() and g.degree() == k:
             return g
     raise RuntimeError(f"failed to sample Hamiltonian {k}-regular graph on {n} vertices")
+
+
+# --------------------------------------------------------------------------------
+# Nested / hierarchical composition (cluster-hub networks)
+# --------------------------------------------------------------------------------
+
+def nested_compose(outer: Graph, inner: Graph, hub: int = 0,
+                   name: str | None = None) -> Graph:
+    """Hierarchical composition: one ``inner`` copy per ``outer`` vertex.
+
+    Every vertex of ``outer`` is replaced by a full copy of ``inner``
+    (vertices of copy i live at ``i*inner.n + j``); every outer edge
+    (a, b) becomes a single link between the ``hub`` vertex of copy a and
+    the ``hub`` vertex of copy b.  This is the cluster-hub pattern of
+    nested interconnection networks (each cluster talks to the backbone
+    through one gateway router), and is generally *irregular*: hubs carry
+    inner-degree + outer-degree.
+    """
+    if inner.n < 1:
+        raise ValueError("inner graph must have at least one vertex")
+    if not 0 <= hub < inner.n:
+        raise ValueError(f"hub={hub} out of range for inner n={inner.n}")
+    b = inner.n
+    edges: list[tuple[int, int]] = []
+    for i in range(outer.n):
+        edges.extend((i * b + u, i * b + v) for u, v in inner.edges)
+    edges.extend((a * b + hub, c * b + hub) for a, c in outer.edges)
+    n = outer.n * b
+    return from_edges(
+        n, edges, name or f"({n})-Nested[{outer.name}*{inner.name}]")
+
+
+_CLUSTER_HUB_PARTS = {"ring": ring, "complete": complete}
+
+
+def _hub_part(kind: str, n: int) -> Graph:
+    try:
+        fn = _CLUSTER_HUB_PARTS[kind]
+    except KeyError:
+        raise ValueError(
+            f"cluster_hub part {kind!r}; known: {sorted(_CLUSTER_HUB_PARTS)}"
+        ) from None
+    if fn is ring and n < 3:  # degenerate ring == path == complete for n<=2
+        fn = complete
+    return fn(n)
+
+
+def cluster_hub(clusters: int, size: int, inner: str = "complete",
+                outer: str = "ring") -> Graph:
+    """Cluster-hub network: ``clusters`` clusters of ``size`` nodes each.
+
+    Each cluster is internally wired as ``inner`` ("complete" or "ring");
+    node 0 of each cluster is its hub/gateway, and the hubs are wired as
+    ``outer`` across clusters.  ``cluster_hub(4, 8)`` is 4 fully-connected
+    8-node clusters on a hub ring — the Cluster3D_Hub shape.
+    """
+    if clusters < 2:
+        raise ValueError("cluster_hub needs at least 2 clusters")
+    if size < 1:
+        raise ValueError("cluster_hub needs size >= 1")
+    g = nested_compose(_hub_part(outer, clusters), _hub_part(inner, size))
+    return g.with_name(
+        f"({g.n})-ClusterHub({clusters}x{size},{inner},{outer})")
 
 
 # --------------------------------------------------------------------------------

@@ -1035,7 +1035,9 @@ class GraphStats:
 
 def stats(g: Graph, bw_restarts: int = 24, seed: int = 0) -> GraphStats:
     d = apsp(g)
-    k = g.degree()
+    # irregular graphs (e.g. cluster-hub compositions) report max degree;
+    # the lower bounds below stay valid since they are monotone in k
+    k = g.degree() if g.is_regular() else int(g.degrees().max())
     return GraphStats(
         name=g.name,
         n=g.n,

@@ -18,6 +18,7 @@ torus congestion collapse on alltoall) and magnitudes (see benchmarks/).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 
@@ -25,7 +26,8 @@ import numpy as np
 
 from . import collectives as C
 from .graphs import Graph
-from .routing import RoutingTable
+from .routing import AdaptiveConfig, RoutingTable
+from .traffic import traffic_pattern
 
 __all__ = [
     "Cluster",
@@ -34,6 +36,7 @@ __all__ = [
     "pingpong_fit",
     "pingpong_mean_latency",
     "collective_bench",
+    "traffic_time",
     "effective_bandwidth",
     "ffte_1d",
     "graph500",
@@ -46,9 +49,13 @@ __all__ = [
 # keyed on the graph's identity (n + canonical edge tuple) rather than
 # smuggled onto the frozen Cluster dataclass via object.__setattr__ (which
 # broke the frozen contract and silently desynced when dataclasses.replace
-# copied the hidden attribute).  Bounded FIFO so sweeps over many topologies
-# cannot grow it without limit.
-_ROUTING_CACHE: dict[tuple[int, tuple], RoutingTable] = {}
+# copied the hidden attribute).  Bounded LRU (hits move to the back, the
+# front is evicted) so an interleaved sweep over more than
+# ``_ROUTING_CACHE_MAX`` topologies keeps its hot tables instead of
+# rebuilding the Floyd closure on every call, and the cache cannot grow
+# without limit.
+_ROUTING_CACHE: collections.OrderedDict[tuple[int, tuple], RoutingTable] = (
+    collections.OrderedDict())
 _ROUTING_CACHE_MAX = 64
 
 
@@ -57,24 +64,43 @@ def _routing_table(graph: Graph) -> RoutingTable:
     rt = _ROUTING_CACHE.get(key)
     if rt is None:
         if len(_ROUTING_CACHE) >= _ROUTING_CACHE_MAX:
-            _ROUTING_CACHE.pop(next(iter(_ROUTING_CACHE)))
+            _ROUTING_CACHE.popitem(last=False)
         rt = RoutingTable.build(graph)
         _ROUTING_CACHE[key] = rt
+    else:
+        _ROUTING_CACHE.move_to_end(key)
     return rt
 
 
 @dataclasses.dataclass(frozen=True)
 class Cluster:
-    """A topology + link model + per-node compute speed."""
+    """A topology + link model + per-node compute speed.
+
+    ``routing`` selects the contention tier every benchmark in this module
+    is costed under: ``"static"`` (single Floyd path per pair, the paper's
+    model) or ``"adaptive"`` (congestion-aware minimal multipath, see
+    ``repro.core.routing.adaptive_link_loads``).  ``adaptive`` optionally
+    overrides the adaptive tier's ``AdaptiveConfig``.
+    """
 
     graph: Graph
     link: C.LinkModel = C.TAISHAN_LINK
     flops: float = 16e9  # paper SimGrid config: dual-core × 8 GFlop/s
     mem_bw: float = 10e9  # local memory bandwidth (B/s) for memory-bound kernels
+    routing: str = "static"
+    adaptive: AdaptiveConfig | None = None
 
-    def routing(self) -> RoutingTable:
+    def __post_init__(self) -> None:
+        if self.routing not in ("static", "adaptive"):
+            raise ValueError(
+                f"routing={self.routing!r} must be 'static' or 'adaptive'")
+
+    def routing_table(self) -> RoutingTable:
         # cached per graph in the module-level table above
         return _routing_table(self.graph)
+
+    def _sim_kw(self) -> dict:
+        return {"routing": self.routing, "adaptive": self.adaptive}
 
 
 def TAISHAN(graph: Graph) -> Cluster:
@@ -86,9 +112,23 @@ def TAISHAN(graph: Graph) -> Cluster:
 # ------------------------------------------------------------------------------
 
 def pingpong_matrix(cl: Cluster, nbytes: float = 1024.0) -> np.ndarray:
-    """Node-to-node one-way latency matrix for ``nbytes`` messages."""
-    rt = cl.routing()
+    """Node-to-node one-way latency matrix for ``nbytes`` messages.
+
+    Raises ``ValueError`` on disconnected graphs: unreachable pairs have
+    infinite hop distance, and letting the ``inf`` flow into downstream
+    fits (``np.polyfit`` in :func:`pingpong_fit`) silently produced NaN
+    coefficients instead of an error.
+    """
+    rt = cl.routing_table()
     h = rt.dist
+    off = ~np.eye(cl.graph.n, dtype=bool)
+    bad = int(np.count_nonzero(~np.isfinite(h[off])))
+    if bad:
+        u, v = np.argwhere(~np.isfinite(h) & off)[0]
+        raise ValueError(
+            f"graph {cl.graph.name!r} is disconnected: {bad} ordered node "
+            f"pairs are unreachable (e.g. {int(u)}->{int(v)}); ping-pong "
+            "latency is undefined")
     lat = cl.link.t0 + cl.link.alpha * h + nbytes / cl.link.bw * h
     np.fill_diagonal(lat, 0.0)
     return lat
@@ -96,7 +136,7 @@ def pingpong_matrix(cl: Cluster, nbytes: float = 1024.0) -> np.ndarray:
 
 def pingpong_fit(cl: Cluster, nbytes: float = 1024.0) -> tuple[float, float, float]:
     """Linear fit T = T0 + α·h over node pairs. Returns (T0, α, pearson ρ)."""
-    rt = cl.routing()
+    rt = cl.routing_table()
     lat = pingpong_matrix(cl, nbytes)
     n = cl.graph.n
     off = ~np.eye(n, dtype=bool)
@@ -139,9 +179,33 @@ def collective_bench(cl: Cluster, op: str, unit_bytes: float,
         from ..comm import schedules  # lazy: repro.comm pulls in jax
 
         if op in schedules.SYNTH_OPS:
+            # schedule synthesis prices candidates under the static tier
+            # (its search already adapts the schedule to the topology)
             return schedules.synthesized_time(
-                cl.graph, op, unit_bytes, model=cl.link, rt=cl.routing()).time
-    return C.collective_time(cl.graph, op, unit_bytes, model=cl.link, rt=cl.routing()).time
+                cl.graph, op, unit_bytes, model=cl.link, rt=cl.routing_table()).time
+    return C.collective_time(cl.graph, op, unit_bytes, model=cl.link,
+                             rt=cl.routing_table(), **cl._sim_kw()).time
+
+
+# ------------------------------------------------------------------------------
+# Synthetic traffic sweeps (adaptive-routing scenario tier)
+# ------------------------------------------------------------------------------
+
+def traffic_time(cl: Cluster, pattern: str, nbytes: float = 1 << 20,
+                 rounds: int = 1, seed: int = 0, **kw) -> float:
+    """Predicted completion time of a synthetic traffic pattern.
+
+    ``pattern`` names a generator in ``repro.core.traffic`` (``uniform`` /
+    ``transpose`` / ``shift`` / ``hotspot`` / ``random-perm``); each round
+    injects the same flow set (``nbytes`` per flow) and is costed under the
+    cluster's routing tier, so static vs adaptive comparisons are a single
+    ``dataclasses.replace(cl, routing=...)`` apart.
+    """
+    flows = traffic_pattern(pattern, cl.graph.n, seed=seed, **kw)
+    rt = cl.routing_table()
+    rnd = [C.Transfer(s, d, float(nbytes)) for s, d in flows]
+    sched = C.Schedule(f"traffic-{pattern}", cl.graph.n, [list(rnd) for _ in range(rounds)])
+    return C.simulate(sched, rt, cl.link, **cl._sim_kw()).time
 
 
 # ------------------------------------------------------------------------------
@@ -164,7 +228,7 @@ def effective_bandwidth(
     methods is folded into using the best-case single round per pattern).
     """
     rng = np.random.default_rng(seed)
-    rt = cl.routing()
+    rt = cl.routing_table()
     n = cl.graph.n
     max_size = mem_per_node / 128.0
     sizes = np.logspace(0, math.log10(max_size), n_sizes)
@@ -180,7 +244,7 @@ def effective_bandwidth(
     for size in sizes:
         for pat in patterns:
             sched = C.Schedule("beff-pat", n, [[C.Transfer(s, d, float(size)) for s, d in pat]])
-            rep = C.simulate(sched, rt, cl.link)
+            rep = C.simulate(sched, rt, cl.link, **cl._sim_kw())
             total = size * len(pat)
             beffs.append(total / rep.time)
     return float(np.mean(beffs))
@@ -201,7 +265,8 @@ def ffte_1d(cl: Cluster, array_len: int) -> float:
     n = cl.graph.n
     total_bytes = array_len * 16.0
     chunk = total_bytes / (n * n)
-    t_a2a = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link, rt=cl.routing()).time
+    t_a2a = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link,
+                              rt=cl.routing_table(), **cl._sim_kw()).time
     flops = 5.0 * array_len * math.log2(max(array_len, 2))
     t_comp = flops / (cl.flops * n)
     # memory-bound bit-reversal/pack passes: ~4 sweeps of the local slice
@@ -230,9 +295,11 @@ def graph500(cl: Cluster, scale: int = 27, edgefactor: int = 16, op: str = "bfs"
     total_bytes = nedge * bytes_per_edge * revisit
     levels = max(int(math.log2(nvert) * 0.75), 8)  # Kronecker graphs: shallow BFS
     chunk = total_bytes / levels / (n * n)
-    t_level_a2a = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link, rt=cl.routing()).time
-    t_level_sync = C.collective_time(cl.graph, C.default_allreduce(n),
-                                     8.0, model=cl.link, rt=cl.routing()).time
+    t_level_a2a = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link,
+                                    rt=cl.routing_table(), **cl._sim_kw()).time
+    t_level_sync = C.collective_time(cl.graph, C.default_allreduce(n), 8.0,
+                                     model=cl.link, rt=cl.routing_table(),
+                                     **cl._sim_kw()).time
     # local edge inspection is memory-bound: ~16 B per edge over local share
     t_mem = revisit * nedge * 16.0 / n / cl.mem_bw
     return levels * (t_level_a2a + t_level_sync) + t_mem
@@ -258,15 +325,17 @@ def npb(cl: Cluster, kernel: str, klass: str = "A") -> float:
       LU: wavefront pipelining: many small nearest-neighbour messages
     """
     n = cl.graph.n
-    rt = cl.routing()
+    rt = cl.routing_table()
+    kw = cl._sim_kw()
     s = _NPB_CLASS[klass.upper()]
     if kernel == "is":
         nkeys = 1 << s
         iters = 10
         total = nkeys * 4.0  # int32 keys cross the wire once per iteration
         chunk = total / (n * n)
-        t = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link, rt=rt).time
-        t += C.collective_time(cl.graph, "allreduce", 1024.0 * 4, model=cl.link, rt=rt).time
+        t = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link, rt=rt, **kw).time
+        t += C.collective_time(cl.graph, C.default_allreduce(n), 1024.0 * 4,
+                               model=cl.link, rt=rt, **kw).time
         t_mem = 6.0 * nkeys * 4.0 / n / cl.mem_bw  # counting + rank + permute sweeps
         return iters * (t + t_mem)
     if kernel == "ft":
@@ -274,7 +343,7 @@ def npb(cl: Cluster, kernel: str, klass: str = "A") -> float:
         total = (1 << s) * 16.0  # complex grid
         iters = 20
         chunk = total / (n * n)
-        t = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link, rt=rt).time
+        t = C.collective_time(cl.graph, "alltoall", chunk, model=cl.link, rt=rt, **kw).time
         flops = 5.0 * (1 << s) * s
         return iters * (t + flops / (cl.flops * n) + 2.0 * (total / n) / cl.mem_bw)
     if kernel == "cg":
@@ -288,8 +357,9 @@ def npb(cl: Cluster, kernel: str, klass: str = "A") -> float:
             peer = lambda i: i ^ (1 << st) if (i ^ (1 << st)) < n else i
             pat = [(i, peer(i)) for i in range(n) if peer(i) != i]
             sched = C.Schedule("cg-halo", n, [[C.Transfer(a, b, vec / n) for a, b in pat]])
-            t_halo += C.simulate(sched, rt, cl.link).time
-        t_dot = 2 * C.collective_time(cl.graph, "allreduce", 8.0, model=cl.link, rt=rt).time
+            t_halo += C.simulate(sched, rt, cl.link, **kw).time
+        t_dot = 2 * C.collective_time(cl.graph, C.default_allreduce(n), 8.0,
+                                      model=cl.link, rt=rt, **kw).time
         nz_per = na * 11 / n
         t_mem = nz_per * 20.0 / cl.mem_bw  # SpMV is memory bound
         return iters * (t_halo + t_dot + t_mem)
@@ -302,8 +372,9 @@ def npb(cl: Cluster, kernel: str, klass: str = "A") -> float:
             face = (1 << lv) ** 2 * 8.0 / max(n ** (2 / 3), 1)
             pat = [(i, (i + 1) % n) for i in range(n)]
             sched = C.Schedule("mg-halo", n, [[C.Transfer(a, b, face) for a, b in pat]])
-            t += 2 * C.simulate(sched, rt, cl.link).time
-        t += C.collective_time(cl.graph, "allreduce", 8.0, model=cl.link, rt=rt).time
+            t += 2 * C.simulate(sched, rt, cl.link, **kw).time
+        t += C.collective_time(cl.graph, C.default_allreduce(n), 8.0,
+                               model=cl.link, rt=rt, **kw).time
         grid = (nx ** 3) / n
         t_mem = 8.0 * grid * 8.0 / cl.mem_bw
         return iters * (t + t_mem)
@@ -314,7 +385,7 @@ def npb(cl: Cluster, kernel: str, klass: str = "A") -> float:
         msg = 5 * nx * 8.0
         pat = [(i, (i + 1) % n) for i in range(n)]
         sched = C.Schedule("lu-pipe", n, [[C.Transfer(a, b, msg) for a, b in pat]])
-        t_comm = 2 * nx * C.simulate(sched, rt, cl.link).time / n
+        t_comm = 2 * nx * C.simulate(sched, rt, cl.link, **kw).time / n
         flops = 150.0 * nx ** 3
         return iters * (t_comm + flops / (cl.flops * n))
     raise ValueError(f"unknown NPB kernel {kernel!r}")

@@ -24,6 +24,8 @@ hypercube                 dim                                     no
 dragonfly                 a, g?, h?                               no
 random-regular            n, k  (+ spec.seed)                     no
 random-hamiltonian-regular n, k (+ spec.seed)                     no
+cluster-hub               clusters, size, inner?, outer?          no
+nested                    outer, inner (string specs), hub?       no
 optimal                   n, k, strategy?, budget?, … (+ seed)    yes
 suboptimal                n, k, n_iter?, fold?      (+ seed)      yes
 ======================== ======================================== =========
@@ -271,6 +273,48 @@ def _build_suboptimal(spec: TopologySpec) -> Graph:
         n=n, k=k, strategy="symmetric-sa", budget=n_iter, fold=fold,
         engine=engine, seed=spec.seed))
     return (res if (res.mpl, res.diameter) <= (sym.mpl, sym.diameter) else sym).graph
+
+
+def _parse_cluster_hub(p: list[str]) -> dict:
+    cs = p[0].split("x")
+    if len(cs) != 2:
+        raise ValueError(
+            "cluster-hub spec is 'cluster-hub:CxS[:inner[:outer]]', "
+            "e.g. 'cluster-hub:4x8:complete:ring'")
+    out = {"clusters": int(cs[0]), "size": int(cs[1])}
+    if len(p) > 1:
+        out["inner"] = p[1]
+    if len(p) > 2:
+        out["outer"] = p[2]
+    return out
+
+
+register_topology(
+    "cluster-hub",
+    lambda s: graphs.cluster_hub(
+        int(_req(s, "clusters")), int(_req(s, "size")),
+        inner=str(s.kwargs.get("inner", "complete")),
+        outer=str(s.kwargs.get("outer", "ring"))),
+    parse=_parse_cluster_hub,
+    doc="hierarchical cluster-hub network: C clusters of S nodes, hubs on "
+        "a backbone ('cluster-hub:4x8[:inner[:outer]]')")
+
+
+def _build_nested(spec: TopologySpec) -> Graph:
+    outer = build_topology(str(_req(spec, "outer")), seed=spec.seed)
+    inner = build_topology(str(_req(spec, "inner")), seed=spec.seed)
+    return graphs.nested_compose(outer, inner,
+                                 hub=int(spec.kwargs.get("hub", 0)))
+
+
+register_topology(
+    "nested",
+    _build_nested,
+    parse=lambda p: {"outer": p[0].replace("/", ":"),
+                     "inner": p[1].replace("/", ":")},
+    doc="general nested composition: one inner copy per outer vertex, hubs "
+        "linked by the outer edges; params are string specs "
+        "('nested:ring/4:torus/2x4' — '/' stands in for ':' inside parts)")
 
 
 register_topology(

@@ -48,6 +48,8 @@ TOPOLOGY_FAMILIES = (
     "dragonfly",
     "random-regular",
     "random-hamiltonian-regular",
+    "cluster-hub",
+    "nested",
     "optimal",
     "suboptimal",
 )
@@ -80,6 +82,7 @@ WORKLOADS = (
     "ffte",
     "graph500",
     "npb",
+    "traffic",
 )
 
 PAPER_SUITES = ("16", "32", "256", "dragonfly", "large-dragonfly")

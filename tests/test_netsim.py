@@ -94,14 +94,78 @@ def test_routing_cache_keyed_on_graph():
 
     g = graphs.ring(12)
     a, b = netsim.Cluster(graph=g), netsim.Cluster(graph=g)
-    assert a.routing() is b.routing()
+    assert a.routing_table() is b.routing_table()
     assert not hasattr(a, "_rt")
     # a different graph gets its own table; swapping via replace follows it
     h = graphs.wagner(12)
     c = dataclasses.replace(a, graph=h)
-    assert c.routing() is not a.routing()
-    assert np.array_equal(c.routing().dist, netsim.RoutingTable.build(h).dist)
+    assert c.routing_table() is not a.routing_table()
+    assert np.array_equal(c.routing_table().dist, netsim.RoutingTable.build(h).dist)
     # the cache is bounded: filling past the cap evicts, never grows forever
     for i in range(netsim._ROUTING_CACHE_MAX + 8):
-        netsim.Cluster(graph=graphs.ring(8 + 2 * (i % 40))).routing()
+        netsim.Cluster(graph=graphs.ring(8 + 2 * (i % 40))).routing_table()
     assert len(netsim._ROUTING_CACHE) <= netsim._ROUTING_CACHE_MAX
+
+
+def test_routing_cache_is_lru():
+    """Eviction is least-recently-USED, not insertion order: a table that
+    keeps getting hit survives an interleaved sweep past the cap."""
+    netsim._ROUTING_CACHE.clear()
+    hot = graphs.ring(10)
+    hot_rt = netsim.Cluster(graph=hot).routing_table()
+    for i in range(netsim._ROUTING_CACHE_MAX - 1):
+        netsim.Cluster(graph=graphs.ring(12 + 2 * i)).routing_table()
+        # touch the hot table between fills — LRU must move it to the back
+        assert netsim.Cluster(graph=hot).routing_table() is hot_rt
+    # cache is now full; one more insert evicts the *oldest untouched* entry
+    first_cold = (graphs.ring(12).n, graphs.ring(12).edges)
+    assert first_cold in netsim._ROUTING_CACHE
+    netsim.Cluster(graph=graphs.ring(200)).routing_table()
+    assert first_cold not in netsim._ROUTING_CACHE  # FIFO victim was the hot one
+    assert netsim.Cluster(graph=hot).routing_table() is hot_rt
+    assert len(netsim._ROUTING_CACHE) <= netsim._ROUTING_CACHE_MAX
+
+
+def test_pingpong_raises_on_disconnected_graph():
+    """Regression: inf distances used to flow into np.polyfit and come back
+    as silent NaN coefficients; now every ping-pong entry point raises a
+    ValueError naming the unreachable pair count."""
+    g = graphs.from_edges(
+        8, [(0, 1), (1, 2), (2, 3), (0, 3), (4, 5), (5, 6), (6, 7), (4, 7)],
+        "two-squares")
+    cl = netsim.Cluster(graph=g)
+    with pytest.raises(ValueError, match="32 ordered node pairs"):
+        netsim.pingpong_matrix(cl)
+    with pytest.raises(ValueError, match="disconnected"):
+        netsim.pingpong_fit(cl)
+    with pytest.raises(ValueError, match="disconnected"):
+        netsim.pingpong_mean_latency(cl)
+
+
+def test_cluster_routing_knob_validated():
+    g = graphs.ring(8)
+    with pytest.raises(ValueError, match="routing"):
+        netsim.Cluster(graph=g, routing="wormhole")
+    cl = netsim.Cluster(graph=g, routing="adaptive")
+    assert cl.routing == "adaptive"
+
+
+def test_traffic_time_patterns_and_tiers():
+    """Every registered pattern prices under both tiers; adaptive never
+    changes the latency term, only contention, so times stay positive and
+    static stays byte-identical across repeat calls."""
+    import dataclasses
+
+    from repro.core.traffic import traffic_patterns
+
+    g = graphs.torus([4, 4])
+    cl = netsim.Cluster(graph=g)
+    ca = dataclasses.replace(cl, routing="adaptive")
+    for pat in traffic_patterns():
+        ts = netsim.traffic_time(cl, pat, 1 << 16, seed=3)
+        ta = netsim.traffic_time(ca, pat, 1 << 16, seed=3)
+        assert ts > 0 and ta > 0, pat
+        assert ts == netsim.traffic_time(cl, pat, 1 << 16, seed=3), pat
+        assert ta == netsim.traffic_time(ca, pat, 1 << 16, seed=3), pat
+    with pytest.raises(ValueError, match="unknown traffic pattern"):
+        netsim.traffic_time(cl, "nope")

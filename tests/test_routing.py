@@ -1,0 +1,210 @@
+"""Routing tiers: minimal-candidate sets agree with the distance matrix,
+the adaptive tier is deterministic and conserves traffic, gamma=0 is the
+static tier exactly, and adaptive relieves the paper's torus alltoall
+congestion collapse."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import collectives as C
+from repro.core import graphs, netsim
+from repro.core.routing import (AdaptiveConfig, RoutingTable,
+                                adaptive_link_loads, loads_to_dict)
+
+
+def paper_small_topologies():
+    """Every paper topology at <= 36 nodes (constructive families)."""
+    return {
+        "ring16": graphs.ring(16),
+        "wagner16": graphs.wagner(16),
+        "bidiakis16": graphs.bidiakis(16),
+        "torus4x4": graphs.torus([4, 4]),
+        "ring32": graphs.ring(32),
+        "wagner32": graphs.wagner(32),
+        "bidiakis32": graphs.bidiakis(32),
+        "torus4x8": graphs.torus([4, 8]),
+        "chvatal32": graphs.chvatal32(),
+        "dragonfly20": graphs.dragonfly(4, 5, 1),
+        "dragonfly30": graphs.dragonfly(5, 6, 1),
+        "dragonfly36": graphs.dragonfly(4, 9, 2),
+    }
+
+
+@pytest.fixture(scope="module", params=sorted(paper_small_topologies()))
+def small_topo(request):
+    return paper_small_topologies()[request.param]
+
+
+def test_candidates_are_exactly_the_minimal_next_hops(small_topo):
+    """Every candidate w for (u, v) has dist[w, v] == dist[u, v] - 1, every
+    such neighbour is a candidate, and the static next_hop is among them."""
+    rt = RoutingTable.build(small_topo)
+    nbrs = small_topo.adjacency_lists()
+    for u in range(small_topo.n):
+        for v in range(small_topo.n):
+            if u == v:
+                assert rt.candidates(u, v) == []
+                continue
+            cands = rt.candidates(u, v)
+            want = [w for w in nbrs[u] if rt.dist[w, v] == rt.dist[u, v] - 1.0]
+            assert cands == want, (u, v)
+            assert int(rt.next_hop[u, v]) in cands
+
+
+def test_candidate_slots_matches_candidates():
+    g = graphs.torus([4, 8])
+    rt = RoutingTable.build(g)
+    rng = np.random.default_rng(0)
+    nodes = rng.integers(0, g.n, size=64)
+    dsts = rng.integers(0, g.n, size=64)
+    mask = rt.candidate_slots(nodes, dsts)
+    nbr = rt.neighbor_table()
+    for i, (u, v) in enumerate(zip(nodes, dsts)):
+        got = sorted(int(nbr[u, j]) for j in np.nonzero(mask[i])[0])
+        assert got == rt.candidates(int(u), int(v))
+
+
+def test_zero_gamma_equals_static_everywhere(small_topo):
+    """AdaptiveConfig(gamma=0) IS the static tier: identical per-link loads
+    on every paper <= 36-node topology under all-to-all."""
+    rt = RoutingTable.build(small_topo)
+    flows = [(u, v, 1.0) for u in range(small_topo.n)
+             for v in range(small_topo.n) if u != v]
+    loads, _ = adaptive_link_loads(rt, flows, AdaptiveConfig(gamma=0.0))
+    assert loads_to_dict(rt, loads) == rt.link_loads(flows)
+
+
+def test_zero_gamma_simulate_is_byte_identical(small_topo):
+    """routing='adaptive' with gamma=0 short-circuits to the static branch
+    of collectives.simulate — every report field matches exactly."""
+    rt = RoutingTable.build(small_topo)
+    sched = C.alltoall_pairwise(small_topo.n, 4096.0)
+    a = C.simulate(sched, rt, C.TAISHAN_LINK)
+    b = C.simulate(sched, rt, C.TAISHAN_LINK, routing="adaptive",
+                   adaptive=AdaptiveConfig(gamma=0.0))
+    assert a == b
+
+
+def test_adaptive_deterministic_and_chunk_independent():
+    g = graphs.torus([4, 8])
+    rt = RoutingTable.build(g)
+    rng = np.random.default_rng(7)
+    flows = [(int(s), int(d), float(b)) for s, d, b in zip(
+        rng.integers(0, g.n, 200), rng.integers(0, g.n, 200),
+        rng.integers(1, 1 << 20, 200)) if s != d]
+    l1, s1 = adaptive_link_loads(rt, flows)
+    l2, s2 = adaptive_link_loads(rt, flows)
+    assert np.array_equal(l1, l2) and np.array_equal(s1, s2)
+    # chunk size is a memory knob only: weights freeze within a hop step
+    l3, _ = adaptive_link_loads(rt, flows, AdaptiveConfig(chunk=7))
+    np.testing.assert_allclose(l3, l1, rtol=1e-12, atol=1e-9)
+
+
+def test_adaptive_conserves_traffic_over_minimal_paths():
+    """Total bytes on the wire == sum of size * hop-distance: adaptive only
+    splits across minimal candidates, never lengthens a route."""
+    g = graphs.chvatal32()
+    rt = RoutingTable.build(g)
+    flows = [(u, (u * 7 + 3) % g.n, 512.0) for u in range(g.n)
+             if u != (u * 7 + 3) % g.n]
+    loads, _ = adaptive_link_loads(rt, flows)
+    want = sum(b * rt.dist[u, v] for u, v, b in flows)
+    assert loads.sum() == pytest.approx(want, rel=1e-12)
+
+
+def test_adaptive_relieves_torus_alltoall_congestion():
+    """The tentpole claim: on the paper's 32-node torus alltoall, adaptive
+    multipath lowers the peak link load and the simulated time."""
+    g = graphs.torus([4, 8])
+    rt = RoutingTable.build(g)
+    sched = C.alltoall_pairwise(g.n, float(1 << 20))
+    stat = C.simulate(sched, rt, C.TAISHAN_LINK)
+    adap = C.simulate(sched, rt, C.TAISHAN_LINK, routing="adaptive")
+    assert adap.max_link_bytes < stat.max_link_bytes
+    assert adap.time < stat.time
+    assert adap.latency_time == stat.latency_time  # minimal paths only
+
+
+def test_adaptive_raises_on_disconnected_flows():
+    g = graphs.from_edges(6, [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)],
+                          "two-triangles")
+    rt = RoutingTable.build(g)
+    with pytest.raises(ValueError, match="unreachable"):
+        adaptive_link_loads(rt, [(0, 3, 1.0)])
+    with pytest.raises(ValueError, match="unreachable"):
+        adaptive_link_loads(rt, [(0, 1, 1.0), (1, 5, 2.0)],
+                            AdaptiveConfig(gamma=0.0))
+
+
+def test_simulate_rejects_unknown_routing():
+    g = graphs.ring(8)
+    rt = RoutingTable.build(g)
+    sched = C.alltoall_pairwise(g.n, 64.0)
+    with pytest.raises(ValueError, match="routing"):
+        C.simulate(sched, rt, C.TAISHAN_LINK, routing="detour")
+
+
+def test_static_trajectories_unchanged_by_the_knob():
+    """routing='static' (the default) must stay byte-identical to the
+    historical single-path model on a full benchmark call."""
+    g = graphs.torus([4, 4])
+    cl = netsim.Cluster(graph=g)
+    assert cl.routing == "static"
+    t1 = netsim.collective_bench(cl, "alltoall", float(1 << 20))
+    t2 = netsim.collective_bench(dataclasses.replace(cl, routing="static"),
+                                 "alltoall", float(1 << 20))
+    assert t1 == t2
+    rep = C.collective_time(g, "alltoall", float(1 << 20))
+    assert t1 == rep.time
+
+
+def test_adaptive_collective_time_root_averaged():
+    """The routing knob threads through the rooted root-averaging loop."""
+    g = graphs.torus([4, 4])
+    a = C.collective_time(g, "bcast", 4096.0, routing="adaptive")
+    s = C.collective_time(g, "bcast", 4096.0)
+    assert a.time > 0 and s.time > 0
+    assert a.schedule.endswith("-rootavg")
+
+
+def test_cluster_hub_and_nested_families():
+    """The hierarchical families: composition size/degree arithmetic, hub
+    wiring, and string-spec round trips through the registry."""
+    from repro.core import topologies
+
+    g = topologies.build_topology("cluster-hub:4x8")
+    assert g.n == 32
+    # 4 * K8 (28 edges each) + ring of 4 hubs
+    assert g.m == 4 * 28 + 4
+    deg = g.degrees()
+    hubs = [0, 8, 16, 24]
+    assert all(deg[h] == 7 + 2 for h in hubs)
+    assert all(deg[i] == 7 for i in range(32) if i not in hubs)
+
+    n = topologies.build_topology("nested:ring/4:complete/8")
+    assert n.n == 32 and n.m == g.m
+    # spec params survive freezing (string specs, not dicts)
+    spec = topologies.parse_topology("nested:ring/4:complete/8")
+    rebuilt = topologies.build_topology(spec)
+    assert rebuilt.edges == n.edges
+
+    with pytest.raises(ValueError, match="cluster-hub"):
+        topologies.build_topology("cluster-hub:4")
+    with pytest.raises(ValueError):
+        topologies.build_topology("cluster-hub:1x8")
+
+
+def test_cluster_hub_stats_and_adaptive_simulation():
+    """Irregular cluster-hub graphs price through metrics.stats (max degree)
+    and both routing tiers end to end."""
+    from repro.core import metrics
+
+    g = graphs.cluster_hub(4, 8)
+    st = metrics.stats(g)
+    assert st.k == 9  # hub degree: 7 intra + 2 backbone
+    cl = netsim.Cluster(graph=g)
+    ts = netsim.traffic_time(cl, "shift", 1 << 16)
+    ta = netsim.traffic_time(dataclasses.replace(cl, routing="adaptive"),
+                             "shift", 1 << 16)
+    assert ts > 0 and ta > 0

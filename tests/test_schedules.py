@@ -153,7 +153,7 @@ def test_collective_bench_schedule_modes():
     synth = netsim.collective_bench(cl, "allreduce", float(1 << 18),
                                     schedule="synth")
     assert synth == S.synthesized_time(cl.graph, "allreduce", float(1 << 18),
-                                       model=cl.link, rt=cl.routing()).time
+                                       model=cl.link, rt=cl.routing_table()).time
     assert synth < legacy  # the co-design claim on the torus
     # ops outside SYNTH_OPS fall back to the legacy model
     assert netsim.collective_bench(cl, "alltoall", 1024.0, schedule="synth") \

@@ -44,6 +44,8 @@ CHEAP_SPECS = {
     "random-regular": TopologySpec.make("random-regular", n=16, k=4, seed=3),
     "random-hamiltonian-regular":
         TopologySpec.make("random-hamiltonian-regular", n=16, k=4, seed=3),
+    "cluster-hub": TopologySpec.make("cluster-hub", clusters=3, size=4),
+    "nested": TopologySpec.make("nested", outer="ring:3", inner="complete:4"),
     "optimal": TopologySpec.make("optimal", n=16, k=4),  # pinned → instant
     "suboptimal": TopologySpec.make("suboptimal", n=48, k=4, n_iter=40),
 }
