@@ -52,7 +52,15 @@ def main(argv=None) -> int:
     p.add_argument("--only", default=None, help="comma-separated module keys")
     p.add_argument("--smoke", action="store_true",
                    help="fast CI subset with reduced budgets (emits BENCH_*.json)")
+    p.add_argument("--parallel", action="store_true",
+                   help="fan run_experiment grids out over a process pool "
+                        "(sets REPRO_PARALLEL=1 for every module)")
     args = p.parse_args(argv)
+    if args.parallel:
+        # the experiment-service default: api.run_experiment reads this env
+        # var when parallel= is not passed explicitly, so every benchmark
+        # module's workload x topology grid fans out without code changes
+        os.environ["REPRO_PARALLEL"] = "1"
     if args.only:
         keys = args.only.split(",")  # --smoke then only reduces budgets
     elif args.smoke:

@@ -141,13 +141,20 @@ _WORKLOADS: dict[str, Callable] = {}
 WORKLOADS: tuple[str, ...] = ()
 
 
-def register_workload(name: str, fn: Callable) -> Callable:
+def register_workload(name: str, fn: Callable, *,
+                      replace: bool = False) -> Callable:
     """Register a workload: ``fn(graph, cluster, **params) -> value``.
 
     ``cluster`` is the routed :class:`repro.core.netsim.Cluster` (None for
     graph-only workloads declared with ``needs_cluster=False`` attribute).
+    Re-registering an existing name raises unless ``replace=True`` — a
+    silent overwrite would let one extension shadow another's workload.
     """
     global WORKLOADS
+    if name in _WORKLOADS and not replace:
+        raise ValueError(
+            f"workload {name!r} is already registered; pass replace=True "
+            "to override it")
     _WORKLOADS[name] = fn
     if name not in WORKLOADS:
         WORKLOADS = WORKLOADS + (name,)
@@ -281,6 +288,78 @@ def _normalize_workload(entry) -> tuple[str, str, dict]:
     return key, name, dict(params)
 
 
+def _run_cell(
+    graph: Graph,
+    cluster_factory: Callable[[Graph], "netsim.Cluster"],
+    routing: str | None,
+    wname: str,
+    params: Mapping[str, Any],
+) -> tuple[Any, float]:
+    """Run one (topology, workload) cell: ``(value, wall_seconds)``.
+
+    The single cell evaluator BOTH the serial loop and the process-pool
+    workers call, so the parallel path is bit-identical to serial by
+    construction.  Cluster construction is outside the timed region (it is
+    a trivial dataclass build — routing tables are computed lazily and
+    cached per ``(n, edges)``), matching the historical serial timings.
+    In forked workers the cell is looked up by *name*: children inherit
+    the parent's workload registry, so even lambda workloads dispatch.
+    """
+    fn = _WORKLOADS[wname]
+    cl = None
+    if getattr(fn, "needs_cluster", True):
+        cl = cluster_factory(graph)
+        if routing is not None:
+            cl = dataclasses.replace(cl, routing=routing)
+    t0 = time.perf_counter()
+    value = fn(graph, cl, **dict(params))
+    return value, time.perf_counter() - t0
+
+
+def _parallel_cells(
+    names: list[str],
+    graphs_out: Mapping[str, Graph],
+    wl: list[tuple[str, str, dict]],
+    cluster_factory: Callable,
+    routing: str | None,
+    jobs: int | None,
+) -> dict[tuple[str, str], tuple[Any, float]] | None:
+    """Dispatch the workload × topology grid over a process pool.
+
+    Returns None when the pool cannot be set up at all — no fork start
+    method (the registry's lambda workloads only travel by inheritance),
+    or unpicklable graphs/factory/params — so the caller falls back to the
+    serial loop.  Workload exceptions are NOT swallowed: they propagate
+    exactly like the serial path would raise them.
+    """
+    import concurrent.futures
+    import multiprocessing
+    import pickle
+
+    if "fork" not in multiprocessing.get_all_start_methods():
+        return None
+    try:  # probe the task payloads once, up front
+        pickle.dumps((cluster_factory, routing,
+                      [graphs_out[n] for n in names],
+                      [(key, wname, params) for key, wname, params in wl]))
+    except Exception:
+        return None
+    n_cells = len(names) * len(wl)
+    workers = min(jobs or os.cpu_count() or 1, n_cells)
+    ctx = multiprocessing.get_context("fork")
+    out: dict[tuple[str, str], tuple[Any, float]] = {}
+    with concurrent.futures.ProcessPoolExecutor(
+            max_workers=max(workers, 1), mp_context=ctx) as pool:
+        futs = [((n, key),
+                 pool.submit(_run_cell, graphs_out[n], cluster_factory,
+                             routing, wname, params))
+                for n in names for key, wname, params in wl]
+        # collect in submission order: result dicts fill exactly like serial
+        for cell, fut in futs:
+            out[cell] = fut.result()
+    return out
+
+
 def run_experiment(
     topologies: Mapping[str, Union[TopologySpec, str, Graph]] | Iterable,
     workloads: Iterable = ("stats",),
@@ -289,6 +368,8 @@ def run_experiment(
     cluster_factory: Callable[[Graph], "netsim.Cluster"] = netsim.TAISHAN,
     engine: str | None = None,
     routing: str | None = None,
+    parallel: bool | None = None,
+    jobs: int | None = None,
 ) -> ExperimentResult:
     """Price a suite of topologies through the simulated cluster workloads.
 
@@ -311,6 +392,16 @@ def run_experiment(
     overriding whatever the factory set.  Every cell is timed; values,
     wall seconds, graphs, and provenance specs come back in an
     :class:`ExperimentResult`.
+
+    ``parallel=True`` fans the workload × topology grid out over a process
+    pool (``jobs`` workers, default the CPU count; forked workers inherit
+    the workload registry and the spec build cache is reused across them).
+    Values are bit-identical to the serial path — both run the same
+    :func:`_run_cell` — and per-cell timings/provenance are preserved; the
+    pool silently falls back to serial when it cannot be set up (no fork
+    start method, unpicklable graphs/factory/params), while workload
+    errors propagate either way.  ``parallel=None`` (the default) reads
+    the ``REPRO_PARALLEL`` env var (``"1"`` enables).
     """
     if engine in engines.CIRCULANT_ENGINES and engine not in engines.ROWS_ENGINES:
         pass  # circulant-only pricer ("jax"): the tier probes availability
@@ -355,18 +446,21 @@ def run_experiment(
 
     values: dict[str, dict[str, Any]] = {n: {} for n in names}
     seconds: dict[str, dict[str, float]] = {n: {} for n in names}
-    needs_cluster = any(getattr(_WORKLOADS[name], "needs_cluster", True)
-                        for _, name, _ in wl)
-    for n in names:
-        g = graphs_out[n]
-        cl = cluster_factory(g) if needs_cluster else None
-        if cl is not None and routing is not None:
-            cl = dataclasses.replace(cl, routing=routing)
-        for key, wname, params in wl:
-            fn = _WORKLOADS[wname]
-            t0 = time.perf_counter()
-            values[n][key] = fn(g, cl, **params)
-            seconds[n][key] = time.perf_counter() - t0
+    if parallel is None:
+        parallel = os.environ.get("REPRO_PARALLEL", "") == "1"
+    cells = None
+    if parallel and len(names) * len(wl) > 1:
+        cells = _parallel_cells(names, graphs_out, wl, cluster_factory,
+                                routing, jobs)
+    if cells is not None:
+        for n in names:
+            for key, _, _ in wl:
+                values[n][key], seconds[n][key] = cells[(n, key)]
+    else:  # serial path (also the parallel-setup fallback)
+        for n in names:
+            for key, wname, params in wl:
+                values[n][key], seconds[n][key] = _run_cell(
+                    graphs_out[n], cluster_factory, routing, wname, params)
     return ExperimentResult(names=names, specs=specs, graphs=graphs_out,
                             values=values, seconds=seconds)
 
@@ -380,13 +474,17 @@ def run_experiment(
 
 def _json_default(o):
     """JSON fallback for workload values: dataclasses (CollectiveReport,
-    SearchResult, ...) → dicts, numpy scalars/arrays → python."""
+    SearchResult, ...) and ``__slots__`` records (GraphStats) → dicts,
+    numpy scalars/arrays → python."""
     if dataclasses.is_dataclass(o) and not isinstance(o, type):
         return dataclasses.asdict(o)
     if hasattr(o, "item") and getattr(o, "shape", None) == ():
         return o.item()
     if hasattr(o, "tolist"):
         return o.tolist()
+    slots = getattr(type(o), "__slots__", None)
+    if slots:  # e.g. metrics.GraphStats — str(o) would be a memory address
+        return {s: getattr(o, s) for s in slots if hasattr(o, s)}
     return str(o)
 
 
@@ -398,8 +496,14 @@ def main(argv: list[str] | None = None) -> int:
     legacy ``family:args`` string, or a plain list of either), plus
     ``"workloads"`` (registry names, ``[name, params]`` pairs, or
     ``{"workload": name, ...params}`` dicts) and optional ``"engine"`` /
-    ``"cache_dir"`` / ``"routing"`` (``"static"`` / ``"adaptive"``).  The result JSON carries names, values, wall seconds,
-    provenance specs, and the plain-text table.
+    ``"cache_dir"`` / ``"routing"`` (``"static"`` / ``"adaptive"``) /
+    ``"parallel"`` / ``"jobs"``.  The result JSON carries names, values,
+    wall seconds, provenance specs, and the plain-text table.
+
+    A malformed spec exits non-zero with the offending key named in the
+    message and writes nothing: the output file is written atomically
+    (tmp + rename), so a failed run can never leave a half-written table
+    behind.
     """
     import argparse
 
@@ -410,8 +514,21 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("-o", "--output", default=None,
                    help="write result JSON here (default: stdout)")
     args = p.parse_args(argv)
-    with open(args.spec) as f:
-        d = json.load(f)
+    try:
+        with open(args.spec) as f:
+            d = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        raise SystemExit(f"cannot read spec {args.spec!r}: {exc}")
+    if not isinstance(d, Mapping):
+        raise SystemExit(
+            f"spec JSON must be an object, got {type(d).__name__}")
+    known = ("suite", "topologies", "workloads", "engine", "cache_dir",
+             "routing", "parallel", "jobs")
+    unknown = sorted(set(d) - set(known))
+    if unknown:
+        raise SystemExit(
+            f"unknown spec key(s) {', '.join(map(repr, unknown))}: known "
+            f"keys are {', '.join(known)}")
 
     def _topo(v):
         return TopologySpec.from_json(v) if isinstance(v, Mapping) else v
@@ -426,15 +543,24 @@ def main(argv: list[str] | None = None) -> int:
             if isinstance(raw, Mapping) else [_topo(v) for v in raw]
     workloads = [tuple(w) if isinstance(w, list) else w
                  for w in d.get("workloads") or ["stats"]]
-    exp = run_experiment(topologies, workloads=workloads,
-                         engine=d.get("engine"), cache_dir=d.get("cache_dir"),
-                         routing=d.get("routing"))
+    try:
+        exp = run_experiment(
+            topologies, workloads=workloads, engine=d.get("engine"),
+            cache_dir=d.get("cache_dir"), routing=d.get("routing"),
+            parallel=d.get("parallel"),
+            jobs=int(d["jobs"]) if d.get("jobs") is not None else None)
+    except (ValueError, KeyError, TypeError) as exc:
+        # bad registry names / malformed workload entries: a clean non-zero
+        # exit naming the offender, not a traceback over a partial table
+        raise SystemExit(f"bad experiment spec {args.spec!r}: {exc}")
     out = {"names": exp.names, "values": exp.values, "seconds": exp.seconds,
            "provenance": exp.provenance(), "table": exp.table()}
     text = json.dumps(out, indent=2, sort_keys=True, default=_json_default)
     if args.output:
-        with open(args.output, "w") as f:
+        tmp = args.output + ".tmp"
+        with open(tmp, "w") as f:
             f.write(text + "\n")
+        os.replace(tmp, args.output)
     else:
         print(text)
     return 0

@@ -1,73 +1,46 @@
-"""Frozen optimal graphs discovered by the deep SA search (examples of
-the paper's week-long searches, re-run offline here and pinned for
-bit-reproducibility).  Both meet the Cerf lower bound exactly."""
+"""Pinned best-known graphs, loaded from the certified table.
 
-# (32,4)-Optimal: MPL=2.354839 (= Cerf bound), D=3
-OPTIMAL_32_4 = (
-    (0, 1), (0, 13), (0, 23), (0, 31), (1, 2), (1, 7), (1, 26), (2, 3),
-    (2, 16), (2, 28), (3, 4), (3, 10), (3, 24), (4, 5), (4, 15), (4, 20),
-    (5, 6), (5, 13), (5, 30), (6, 7), (6, 11), (6, 25), (7, 8), (7, 19),
-    (8, 9), (8, 15), (8, 22), (9, 10), (9, 27), (9, 31), (10, 11), (10, 29),
-    (11, 12), (11, 17), (12, 13), (12, 22), (12, 28), (13, 14), (14, 15), (14, 18),
-    (14, 26), (15, 16), (16, 17), (16, 31), (17, 18), (17, 21), (18, 19), (18, 29),
-    (19, 20), (19, 23), (20, 21), (20, 27), (21, 22), (21, 25), (22, 23), (23, 24),
-    (24, 25), (24, 30), (25, 26), (26, 27), (27, 28), (28, 29), (29, 30), (30, 31),
-)
+The ad-hoc edge-list/offset pins that used to live here migrated into
+``src/repro/data/certified.json`` — the certified best-known-graph table
+(see ``repro.core.certify``), where every entry carries its recomputed
+certificate (edges-hash, exact total hops, MPL, diameter, bisection) and
+SearchSpec provenance, and the ``tools/check_certified.py`` CI gate keeps
+the recorded values honest.  This module is now a thin loader that exposes
+the same names the search tiers always imported:
 
-# (32,3)-Optimal: MPL=2.935484 (= Cerf bound), D=4
-OPTIMAL_32_3 = (
-    (0, 1), (0, 6), (0, 31), (1, 2), (1, 11), (2, 3), (2, 27), (3, 4),
-    (3, 17), (4, 5), (4, 13), (5, 6), (5, 22), (6, 7), (7, 8), (7, 28),
-    (8, 9), (8, 19), (9, 10), (9, 15), (10, 11), (10, 23), (11, 12), (12, 13),
-    (12, 20), (13, 14), (14, 15), (14, 26), (15, 16), (16, 17), (16, 30), (17, 18),
-    (18, 19), (18, 24), (19, 20), (20, 21), (21, 22), (21, 29), (22, 23), (23, 24),
-    (24, 25), (25, 26), (25, 31), (26, 27), (27, 28), (28, 29), (29, 30), (30, 31),
-)
+``KNOWN_EDGE_LISTS``
+    ``(n, k) -> edge tuple`` for the frozen optimal graphs discovered by
+    the deep SA search (examples of the paper's week-long searches, re-run
+    offline and pinned for bit-reproducibility).  All meet the Cerf lower
+    bound exactly; ``OPTIMAL_16_4`` / ``OPTIMAL_32_3`` / ``OPTIMAL_32_4``
+    remain as aliases.
 
-# (16,4)-Optimal: MPL=1.75 (= the paper's TABLE 1 value), D=3, BW=12 — the
-# best-balanced instance among the MPL-optimal graphs found by the replica
-# search (highest simulated b_eff, asserted in tests).
-OPTIMAL_16_4 = (
-    (0, 1), (0, 6), (0, 12), (0, 15), (1, 2), (1, 5), (1, 9), (2, 3),
-    (2, 7), (2, 11), (3, 4), (3, 10), (3, 14), (4, 5), (4, 8), (4, 12),
-    (5, 6), (5, 14), (6, 7), (6, 10), (7, 8), (7, 13), (8, 9), (8, 15),
-    (9, 10), (9, 13), (10, 11), (11, 12), (11, 15), (12, 13), (13, 14), (14, 15),
-)
+``KNOWN_CIRCULANT_OFFSETS``
+    ``(n, k) -> offset tuple`` for the best circulant offset sets found by
+    ``search.circulant_search`` (full offset lists including the ring
+    offset 1), the warm starts the large-N tiers polish from.  Exact
+    MPL/diameter per entry live in the table, not in comments.
+"""
+from __future__ import annotations
 
-KNOWN_EDGE_LISTS = {
-    (16, 4): OPTIMAL_16_4,
-    (32, 4): OPTIMAL_32_4,
-    (32, 3): OPTIMAL_32_3,
-}
+from . import certify
 
-# Best circulant offset sets found by ``search.circulant_search`` (seeded runs
-# re-executed offline and frozen here so the large-N tiers skip the hillclimb
-# and go straight to the orbit-SA polish).  Full offset lists including the
-# ring offset 1; exact MPL/diameter from the vertex-transitive BFS noted per
-# entry.  Deeper polish results live in the bench cache, not here — these are
-# the reproducible circulant-subspace optima.
-KNOWN_CIRCULANT_OFFSETS: dict[tuple[int, int], tuple[int, ...]] = {
-    (256, 4): (1, 92),             # MPL 7.5490, D 11
-    (256, 6): (1, 47, 122),        # MPL 4.2510, D 6
-    (256, 8): (1, 20, 29, 125),    # MPL 3.3490, D 5
-    (512, 4): (1, 31),             # MPL 10.6771, D 16
-    (512, 6): (1, 49, 68),         # MPL 5.4110, D 8
-    (512, 8): (1, 148, 155, 190),  # MPL 4.0685, D 6
-    (1024, 4): (1, 90),            # MPL 15.0860, D 23
-    (1024, 6): (1, 276, 402),      # MPL 6.8416, D 10
-    (1024, 8): (1, 378, 403, 473),  # MPL 4.9081, D 7
-    # N=2048/4096 polish tier (symmetry-aware incremental orbit SA warm starts)
-    (2048, 4): (1, 63),              # MPL 21.3385, D 32
-    (2048, 6): (1, 176, 545),        # MPL 8.6527, D 13
-    (2048, 8): (1, 540, 598, 933),   # MPL 5.9130, D 9
-    (4096, 4): (1, 90),              # MPL 30.1722, D 45
-    (4096, 6): (1, 770, 1846),       # MPL 10.9243, D 16
-    (4096, 8): (1, 652, 1651, 1911),  # MPL 7.0855, D 11
-    # N=8192/16384 polish tier (bitset-frontier engine warm starts)
-    (8192, 4): (1, 3199),              # MPL 42.6693, D 64
-    (8192, 6): (1, 480, 2187),         # MPL 13.8520, D 22
-    (8192, 8): (1, 986, 2810, 3163),   # MPL 8.5128, D 13
-    (16384, 4): (1, 4140),             # MPL 60.3496, D 91
-    (16384, 6): (1, 5060, 6967),       # MPL 17.4367, D 28
-    (16384, 8): (1, 3255, 5980, 7212),  # MPL 10.1394, D 15
-}
+
+def _load() -> tuple[dict, dict]:
+    edge_lists: dict[tuple[int, int], tuple[tuple[int, int], ...]] = {}
+    offsets: dict[tuple[int, int], tuple[int, ...]] = {}
+    for e in certify.table_entries():
+        key = (int(e["n"]), int(e["k"]))
+        if e["family"] == "optimal" and e.get("edges") is not None:
+            edge_lists[key] = tuple(tuple(edge) for edge in e["edges"])
+        elif e["family"] == "circulant" and e.get("offsets") is not None:
+            offsets[key] = tuple(int(o) for o in e["offsets"])
+    return edge_lists, offsets
+
+
+KNOWN_EDGE_LISTS, KNOWN_CIRCULANT_OFFSETS = _load()
+
+# legacy aliases for the three pinned optimal instances
+OPTIMAL_16_4 = KNOWN_EDGE_LISTS[(16, 4)]
+OPTIMAL_32_4 = KNOWN_EDGE_LISTS[(32, 4)]
+OPTIMAL_32_3 = KNOWN_EDGE_LISTS[(32, 3)]

@@ -155,7 +155,10 @@ class SearchSpec:
     Core knobs every tier understands are first-class fields; anything
     strategy-specific (``target_mpl``, ``start_offsets``, ``incremental``,
     ``moves_per_step``, ``girth_min`` …) rides in ``params`` and is forwarded
-    to the strategy's underlying entry point verbatim.  ``budget`` maps onto
+    to the strategy's underlying entry point verbatim.  ``warm_start=True``
+    in ``params`` seeds the SA tiers from the certified best-known-graph
+    table when a ``(n, k)`` entry matches (``repro.core.certify``); the
+    default stays cold so per-seed trajectories are unchanged.  ``budget`` maps onto
     each tier's natural budget knob (``n_iter`` for the SA tiers, ``limit``
     for the exhaustive tier, the two-stage budget for ``large``).
 
@@ -245,10 +248,19 @@ _STRATEGIES: dict[str, SearchStrategy] = {}
 STRATEGIES: tuple[str, ...] = ()
 
 
-def register_strategy(name: str, run: Callable, doc: str = "") -> SearchStrategy:
-    """Register (or replace) a search strategy under ``name``."""
+def register_strategy(name: str, run: Callable, doc: str = "",
+                      replace: bool = False) -> SearchStrategy:
+    """Register a search strategy under ``name``.
+
+    Re-registering an existing strategy raises unless ``replace=True``
+    (same contract as ``register_topology`` / ``register_objective``).
+    """
     global STRATEGIES
     strat = SearchStrategy(name=name, run=run, doc=doc)
+    if name in _STRATEGIES and not replace:
+        raise ValueError(
+            f"strategy {name!r} is already registered; pass replace=True "
+            "to override it")
     _STRATEGIES[name] = strat
     if name not in STRATEGIES:
         STRATEGIES = STRATEGIES + (name,)
@@ -296,16 +308,21 @@ OBJECTIVES: tuple[str, ...] = ()
 
 
 def register_objective(name: str, run: Callable | None = None,
-                       doc: str = "") -> Objective:
-    """Register (or replace) a search objective under ``name``.
+                       doc: str = "", replace: bool = False) -> Objective:
+    """Register a search objective under ``name``.
 
     ``run=None`` marks a native objective: the strategy tiers minimise it
     themselves and :func:`search` goes through strategy resolution as usual.
     A non-None ``run`` owns the whole search for its spec and must return a
-    ``SearchResult``.
+    ``SearchResult``.  Re-registering an existing objective raises unless
+    ``replace=True``.
     """
     global OBJECTIVES
     obj = Objective(name=name, run=run, doc=doc)
+    if name in _OBJECTIVES and not replace:
+        raise ValueError(
+            f"objective {name!r} is already registered; pass replace=True "
+            "to override it")
     _OBJECTIVES[name] = obj
     if name not in OBJECTIVES:
         OBJECTIVES = OBJECTIVES + (name,)
@@ -388,9 +405,23 @@ def search(spec: SearchSpec):
 
 def _strip(kw: dict, *reserved: str) -> dict:
     out = dict(kw)
-    for r in ("graph_name",) + reserved:
+    for r in ("graph_name", "warm_start") + reserved:
         out.pop(r, None)
     return out
+
+
+def _warm_start_entry(spec: SearchSpec):
+    """The certified table entry seeding a warm-started run, or None.
+
+    Only consulted when the spec carries ``warm_start=True`` in params —
+    the default stays cold so existing search trajectories are untouched
+    (the maintenance invariant: bit-identical per seed).
+    """
+    if not spec.kwargs.get("warm_start"):
+        return None
+    from . import certify
+
+    return certify.get_entry(spec.n, spec.k)
 
 
 def _run_pinned(spec: SearchSpec):
@@ -424,6 +455,12 @@ def _run_sa(spec: SearchSpec):
     kw = _strip(spec.kwargs)
     if "target_mpl" not in kw:
         kw["target_mpl"] = search_mod.KNOWN_OPTIMAL_MPL.get((spec.n, spec.k))
+    if "start" not in kw:
+        entry = _warm_start_entry(spec)
+        if entry is not None:
+            from . import certify
+
+            kw["start"] = certify.build_entry_graph(entry)
     res = search_mod.sa_search(
         spec.n, spec.k, seed=spec.seed, n_iter=spec.budget or 4000,
         replicas=spec.replicas or (3 if spec.n <= 40 else 2), **kw)
@@ -446,6 +483,10 @@ def _run_symmetric_sa(spec: SearchSpec):
     kw = _strip(spec.kwargs)
     if "start_offsets" in kw and kw["start_offsets"] is not None:
         kw["start_offsets"] = tuple(kw["start_offsets"])
+    if kw.get("start_offsets") is None:
+        entry = _warm_start_entry(spec)
+        if entry is not None and entry.get("offsets") is not None:
+            kw["start_offsets"] = tuple(int(o) for o in entry["offsets"])
     return search_mod.symmetric_sa_search(
         spec.n, spec.k, seed=spec.seed, n_iter=spec.budget or 3000,
         fold=spec.fold if spec.fold is not None else 4,

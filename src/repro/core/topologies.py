@@ -91,11 +91,21 @@ def register_topology(
     parse: Callable[[list[str]], dict] | None = None,
     doc: str = "",
     searched: bool = False,
+    replace: bool = False,
 ) -> TopologyFamily:
-    """Register (or replace) a topology family under ``name``."""
+    """Register a topology family under ``name``.
+
+    Re-registering an existing family raises unless ``replace=True`` — a
+    silent overwrite would let an extension shadow a built-in (or another
+    extension) without anyone noticing until graphs come out wrong.
+    """
     global FAMILIES
     fam = TopologyFamily(name=name, build=build, parse=parse, doc=doc,
                          searched=searched)
+    if fam.name in _REGISTRY and not replace:
+        raise ValueError(
+            f"topology family {fam.name!r} is already registered; pass "
+            "replace=True to override it")
     _REGISTRY[fam.name] = fam
     if fam.name not in FAMILIES:
         FAMILIES = FAMILIES + (fam.name,)

@@ -1,0 +1,147 @@
+"""Golden certificate suite for the certified best-known-graph table.
+
+Every entry in ``src/repro/data/certified.json`` is recomputed here from
+scratch through ``repro.core.certify``'s independent per-source BFS (NOT
+the incremental APSP engines): the ≤36-node paper topologies and pinned
+optimal edge lists fully (MPL, diameter, total hops, bisection), the
+pinned circulants with n <= 512 fully, and the larger circulants behind
+the ``slow`` marker.  A deliberately corrupted entry must make the
+verifier (and the ``tools/check_certified.py`` CI gate) disagree loudly.
+"""
+import copy
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import certify, graphs, known_optimal, metrics
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+ENTRIES = certify.table_entries()
+BY_NAME = {e["name"]: e for e in ENTRIES}
+
+SMALL = [e for e in ENTRIES if e["family"] in ("optimal", "baseline")]
+CIRC_FAST = [e for e in ENTRIES if e["family"] == "circulant" and e["n"] <= 512]
+CIRC_SLOW = [e for e in ENTRIES if e["family"] == "circulant" and e["n"] > 512]
+
+
+def test_table_covers_the_pinned_universe():
+    # every paper ≤36-node golden topology, every pinned optimal edge list,
+    # and every pinned circulant has a certified entry
+    assert len(SMALL) == 17  # 3 optimal + 14 golden baselines
+    assert {(e["n"], e["k"]) for e in ENTRIES if e["family"] == "optimal"} == \
+        set(known_optimal.KNOWN_EDGE_LISTS)
+    assert {(e["n"], e["k"]) for e in ENTRIES if e["family"] == "circulant"} \
+        == set(known_optimal.KNOWN_CIRCULANT_OFFSETS)
+    for e in ENTRIES:  # the certificate schema is complete on every entry
+        for field in ("name", "n", "k", "family", "edges_hash", "total_hops",
+                      "mpl", "diameter"):
+            assert e.get(field) is not None, (e["name"], field)
+
+
+@pytest.mark.parametrize("name", [e["name"] for e in SMALL])
+def test_small_certificates_recompute(name):
+    assert certify.verify_entry(BY_NAME[name], full=True) == []
+
+
+@pytest.mark.parametrize("name", [e["name"] for e in CIRC_FAST])
+def test_circulant_certificates_recompute(name):
+    assert certify.verify_entry(BY_NAME[name], full=True) == []
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", [e["name"] for e in CIRC_SLOW])
+def test_large_circulant_certificates_recompute(name):
+    assert certify.verify_entry(BY_NAME[name], full=True) == []
+
+
+def test_certifier_is_independent_of_the_engines():
+    """certify() must agree with metrics.apsp on a golden row while sharing
+    no code with it: cross-check ring(16) against the frozen golden values
+    (total 1024, D 8, BW 2) computed both ways."""
+    g = graphs.ring(16)
+    cert = certify.certify(g, bisection=True)
+    assert (cert.total_hops, cert.diameter, cert.bisection) == (1024, 8, 2)
+    d = metrics.apsp(g)
+    assert cert.total_hops == int(d[~np.eye(16, dtype=bool)].sum())
+    assert cert.mpl == metrics.mpl(g, d)
+
+
+def test_certify_flags_disconnection():
+    g = graphs.from_edges(4, [(0, 1), (2, 3)], "split")
+    cert = certify.certify(g)
+    assert not cert.connected and cert.mpl == float("inf")
+
+
+@pytest.mark.parametrize("field,delta", [
+    ("mpl", 0.01), ("diameter", 1), ("total_hops", 2)])
+def test_corrupted_entry_disagrees_loudly(field, delta):
+    entry = copy.deepcopy(BY_NAME["(32,4)-Optimal"])
+    entry[field] = entry[field] + delta
+    errors = certify.verify_entry(entry, full=True)
+    assert errors, "corruption went undetected"
+    assert any(field in msg and "(32,4)-Optimal" in msg for msg in errors)
+
+
+def test_corrupted_build_info_breaks_the_hash():
+    entry = copy.deepcopy(BY_NAME["(256,4)-Circulant"])
+    entry["offsets"] = [1, 93]  # one off from the pinned (1, 92)
+    errors = certify.verify_entry(entry, full=False)
+    assert any("edges_hash" in msg for msg in errors)
+
+
+def test_check_certified_gate_fails_on_perturbation(tmp_path):
+    """The CI gate exits non-zero and names the perturbed entry."""
+    table = json.loads((ROOT / "src/repro/data/certified.json").read_text())
+    victim = next(e for e in table["entries"] if e["n"] <= 32)
+    victim["mpl"] += 0.25
+    bad = tmp_path / "certified.json"
+    bad.write_text(json.dumps(table))
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools/check_certified.py"),
+         "--table", str(bad), "--limit", "32"],
+        capture_output=True, text=True, cwd=ROOT)
+    assert r.returncode != 0
+    assert victim["name"] in r.stdout
+
+
+def test_check_certified_gate_passes_small_n():
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools/check_certified.py"),
+         "--limit", "64"],
+        capture_output=True, text=True, cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "verified" in r.stdout
+
+
+def test_known_optimal_loads_from_table():
+    """The legacy pins are now views over the certified table."""
+    assert known_optimal.OPTIMAL_16_4 == known_optimal.KNOWN_EDGE_LISTS[(16, 4)]
+    g = graphs.from_edges(16, known_optimal.OPTIMAL_16_4, "o")
+    assert certify.edges_hash(g) == BY_NAME["(16,4)-Optimal"]["edges_hash"]
+    assert known_optimal.KNOWN_CIRCULANT_OFFSETS[(256, 4)] == (1, 92)
+
+
+def test_warm_start_graph_matches_certificate():
+    g = certify.warm_start_graph(32, 4)
+    assert g is not None and g.n == 32
+    cert = certify.certify(g)
+    assert cert.mpl == BY_NAME["(32,4)-Optimal"]["mpl"]
+    # no searched entry for a baseline-only (n, k): no warm start
+    assert certify.warm_start_graph(36, 5) is None
+
+
+def test_entry_provenance_is_replayable():
+    """Searched entries carry SearchSpec provenance that round-trips."""
+    from repro.core.specs import SearchSpec
+
+    for e in ENTRIES:
+        if e["family"] == "baseline":
+            assert e["provenance"] is None and e["spec"] is not None
+        else:
+            spec = SearchSpec.from_json(json.dumps(e["provenance"]))
+            assert (spec.n, spec.k) == (e["n"], e["k"])

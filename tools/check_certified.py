@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Certified-table gate: the best-known-graph table must never regress.
+
+Run by the CI ``certified-gate`` job (and locally via
+``PYTHONPATH=src python tools/check_certified.py``).  For every entry in
+``src/repro/data/certified.json`` the gate rebuilds the graph from its
+recorded build info (edges / circulant offsets / TopologySpec) and checks:
+
+1. **Identity** — the recomputed edges-hash matches the recorded one, so
+   the build info still produces the exact graph that was certified.
+2. **Certificate** (entries with ``n <= --limit``, default 4096; pass
+   ``--full`` for everything) — total hops, MPL, diameter and, where
+   recorded, the bisection width are recomputed *from scratch* through
+   ``repro.core.certify``'s independent per-source BFS (not the
+   incremental APSP engines) and must agree exactly.  Entries above the
+   limit still get the identity check, so a large-N offset-list typo
+   cannot hide.
+3. **Plausibility anchor** — every entry's MPL must be >= the Cerf lower
+   bound: a "better than optimal" record means the certifier or the table
+   is wrong.  (Pinned-value regressions are caught by check 2: any drift
+   between recorded and recomputed MPL/diameter fails the gate.)
+
+Any discrepancy prints the offending entry by name and exits non-zero.
+``--regen`` recomputes every certificate (within the limit) from the build
+info and rewrites the table in place — the refresh flow when a search run
+finds a genuinely better graph and its entry is updated by hand.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import certify, metrics  # noqa: E402
+
+
+def check(path: str, limit: int, full: bool) -> int:
+    entries = certify.table_entries(path)
+    if not entries:
+        print(f"FAIL: {path} has no entries")
+        return 1
+    failures = 0
+    for e in entries:
+        name = e.get("name", "?")
+        deep = full or e["n"] <= limit
+        bad = list(certify.verify_entry(e, full=deep))
+        lb = metrics.mpl_lower_bound(e["n"], e["k"])
+        if e["mpl"] < lb - 1e-9:
+            bad.append(
+                f"entry {name!r}: recorded mpl {e['mpl']} beats the Cerf "
+                f"lower bound {lb} — certificate is impossible")
+        for msg in bad:
+            print(f"FAIL: {msg}")
+        failures += len(bad)
+        if not bad:
+            mode = "certified" if deep else "hash-checked"
+            print(f"ok: {name} ({mode}, mpl={e['mpl']:.4f} D={e['diameter']})")
+    if failures:
+        print(f"\n{failures} certified-table failure(s)")
+        return 1
+    print(f"\nall {len(entries)} certified entries verified")
+    return 0
+
+
+def regen(path: str, limit: int, full: bool) -> int:
+    table = json.load(open(path))
+    for e in table["entries"]:
+        if not (full or e["n"] <= limit):
+            continue
+        g = certify.build_entry_graph(e)
+        cert = certify.certify(g, bisection=e.get("bisection") is not None)
+        e.update(edges_hash=cert.edges_hash, total_hops=cert.total_hops,
+                 mpl=cert.mpl, diameter=cert.diameter)
+        if e.get("bisection") is not None:
+            e["bisection"] = cert.bisection
+        print(f"regen: {e['name']} mpl={cert.mpl:.4f} D={cert.diameter}")
+    with open(path, "w") as f:
+        json.dump(table, f, indent=1)
+        f.write("\n")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--table", default=certify.TABLE_PATH,
+                   help="path to certified.json (default: the shipped table)")
+    p.add_argument("--limit", type=int, default=4096,
+                   help="full-recompute entries with n <= LIMIT (default 4096)")
+    p.add_argument("--full", action="store_true",
+                   help="recompute every certificate regardless of n")
+    p.add_argument("--regen", action="store_true",
+                   help="recompute certificates and rewrite the table in place")
+    args = p.parse_args(argv)
+    if args.regen:
+        return regen(args.table, args.limit, args.full)
+    return check(args.table, args.limit, args.full)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
