@@ -96,11 +96,24 @@ def suite_large_dragonfly() -> dict[str, tuple[Graph, Graph]]:
 # ------------------------------------------------------------------------------
 
 class Rows:
-    """Collects (name, us_per_call, derived) CSV rows + saves JSON."""
+    """Collects (name, us_per_call, derived) CSV rows + saves JSON.
 
-    def __init__(self, bench: str):
+    Drivers with a canonical machine-readable artifact pass ``artifact``
+    (e.g. ``Rows("fig4", artifact="fig4")``): they append their result dicts
+    to ``.results`` (and top-level fields to ``.meta``) and ``save()`` writes
+    the single ``BENCH_<artifact>.json`` — the one save path, which also
+    sweeps the stale per-driver dumps this class used to scatter
+    (``<bench>.json`` / ``<bench>_rows.json`` and case-variant twins that
+    shadow the artifact on case-insensitive filesystems and confuse the CI
+    ``BENCH_*.json`` glob).  Artifact-less drivers keep the legacy
+    ``<bench>.json`` rows dump."""
+
+    def __init__(self, bench: str, artifact: str | None = None):
         self.bench = bench
+        self.artifact = artifact
         self.rows: list[tuple[str, float, str]] = []
+        self.results: list[dict] = []
+        self.meta: dict = {}
 
     def add(self, name: str, seconds: float, derived: str) -> None:
         self.rows.append((f"{self.bench}/{name}", seconds * 1e6, derived))
@@ -112,14 +125,15 @@ class Rows:
     def save(self) -> None:
         out = os.path.join(os.path.dirname(CACHE_DIR), "benchmarks")
         os.makedirs(out, exist_ok=True)
-        name = self.bench + ".json"
-        # bench_* modules emit a canonical machine-readable BENCH_<x>.json
-        # artifact, so their rows dump always takes the _rows suffix — on a
-        # case-insensitive filesystem <bench>.json would overwrite the
-        # artifact, and mixed-case twins confuse the CI artifact glob
-        # (bench_search.json used to shadow BENCH_search.json this way).
-        # Keyed on the name, not directory state, so save order is irrelevant.
-        if self.bench.lower().startswith("bench_"):
-            name = self.bench + "_rows.json"
-        with open(os.path.join(out, name), "w") as f:
+        if self.artifact is not None:
+            canon = f"BENCH_{self.artifact}.json"
+            stale = {self.bench + ".json", self.bench + "_rows.json"}
+            for fname in os.listdir(out):
+                if fname != canon and (fname in stale
+                                       or fname.lower() == canon.lower()):
+                    os.remove(os.path.join(out, fname))
+            with open(os.path.join(out, canon), "w") as f:
+                json.dump({**self.meta, "results": self.results}, f, indent=1)
+            return
+        with open(os.path.join(out, self.bench + ".json"), "w") as f:
             json.dump([{"name": n, "us": u, "derived": d} for n, u, d in self.rows], f, indent=1)

@@ -5,14 +5,12 @@ Paper anchors: (16,4)-Opt alltoall 2.16/1.87; (32,4)-Opt 2.79/2.64.
 Two cost models run side by side: the legacy rank-space heuristics
 (``core.collectives``, keys ``<op>-<size>``) and the per-topology schedules
 synthesized by ``repro.comm.schedules`` (keys ``<op>-<size>-synth``, ops that
-subsystem covers).  Besides the CSV rows this emits a machine-readable
-``results/benchmarks/BENCH_fig4.json``: every row embeds the topology's
+subsystem covers).  Besides the CSV rows the returned ``Rows`` saves the
+machine-readable ``results/benchmarks/BENCH_fig4.json`` (the unified
+``common.Rows.save`` artifact path): every row embeds the topology's
 replayable ``TopologySpec`` JSON and the exact workload params, so any cell
 replays through ``python -m repro.api`` (see docs/BENCHMARKS.md).
 """
-import json
-import os
-
 from repro import api
 
 from . import common
@@ -25,13 +23,12 @@ SIZES = {"1MB": 1 << 20, "32MB": 32 << 20}
 
 
 def run() -> common.Rows:
-    rows = common.Rows("fig4")
+    rows = common.Rows("fig4", artifact="fig4")
     workloads = [(f"{op}-{sz_name}", "collective", {"op": op, "unit_bytes": sz})
                  for op in OPS for sz_name, sz in SIZES.items()]
     workloads += [(f"{op}-{sz_name}-synth", "collective_synth",
                    {"op": op, "unit_bytes": sz})
                   for op in SYNTH_OPS for sz_name, sz in SIZES.items()]
-    results = []
     for key in ("16", "32"):
         exp = api.run_experiment(api.paper_suite(key), workloads=workloads,
                                  cache_dir=common.CACHE_DIR)
@@ -41,15 +38,11 @@ def run() -> common.Rows:
             for name in exp.names:
                 rows.add(f"{wkey}/{name}", exp.values[name][wkey],
                          f"ratio={ratios[name]:.3f}")
-                results.append({
+                rows.results.append({
                     "suite": key, "key": wkey, "workload": wname,
                     "params": params, "topology": name,
                     "seconds": exp.values[name][wkey],
                     "ratio_vs_ring": round(ratios[name], 4),
                     "spec": prov[name],
                 })
-    out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "BENCH_fig4.json"), "w") as f:
-        json.dump({"results": results}, f, indent=1)
     return rows

@@ -8,14 +8,14 @@ multipath weighted by the EWMA congestion score, ``repro.core.routing``) —
 across the classic synthetic sweeps (uniform / transpose / shift / hotspot,
 ``repro.core.traffic``) and the torus alltoall collective itself.
 
-Besides the CSV rows this emits ``results/benchmarks/BENCH_routing.json``;
-the CI bench-smoke job asserts the ``torus_alltoall`` row's
+Besides the CSV rows the returned ``Rows`` saves
+``results/benchmarks/BENCH_routing.json`` (the unified ``common.Rows.save``
+artifact path); the CI bench-smoke job asserts the ``torus_alltoall`` row's
 ``adaptive_vs_static > 1`` (adaptive must relieve the torus congestion
 collapse).  Row schema in docs/BENCHMARKS.md.
 """
 import dataclasses
 import json
-import os
 import time
 
 from repro import api
@@ -43,8 +43,8 @@ def _clusters(graph):
 
 
 def run() -> common.Rows:
-    rows = common.Rows("fig_routing")
-    results = []
+    rows = common.Rows("fig_routing", artifact="routing")
+    results = rows.results
     for key, spec_str in TOPOLOGIES:
         spec = api.parse_topology(spec_str)
         g = api.build_topology(spec)
@@ -83,9 +83,4 @@ def run() -> common.Rows:
         "adaptive_vs_static": round(s / a, 4),
         "spec": json.loads(spec.to_json()),
     })
-
-    out_dir = os.path.join(os.path.dirname(common.CACHE_DIR), "benchmarks")
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "BENCH_routing.json"), "w") as f:
-        json.dump({"results": results}, f, indent=1)
     return rows

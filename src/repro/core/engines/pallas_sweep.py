@@ -16,17 +16,40 @@ each device sweeps its replicas' graphs locally and only the per-replica
 from __future__ import annotations
 
 import functools
+import os
 
 import numpy as np
 
 from .base import Engine
 
-_INTERPRET = True
+# None = unresolved: the first get_interpret() call resolves it from the
+# REPRO_PALLAS_INTERPRET env override, falling back to platform auto-detect
+# (interpret on CPU hosts, compiled on TPU/GPU backends)
+_INTERPRET: bool | None = None
 _CACHE: dict = {}
 
 
-def set_interpret(v: bool) -> None:
-    """Flip Pallas interpret mode for the BFS sweep (False on real TPU)."""
+def _default_interpret() -> bool:
+    """Resolve the interpret default: ``REPRO_PALLAS_INTERPRET`` wins
+    (1/true/on → interpret, 0/false/off → compiled), otherwise compiled
+    mode exactly when jax reports an accelerator backend — so device
+    runners flip modes without code edits."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env.strip() != "":
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    jax = _jax()
+    if jax is None:
+        return True
+    try:
+        backend = jax.default_backend()
+    except Exception:  # pragma: no cover - defensive: broken jax install
+        return True
+    return backend not in ("tpu", "gpu", "cuda", "rocm")
+
+
+def set_interpret(v: bool | None) -> None:
+    """Flip Pallas interpret mode for the BFS sweep (False on real TPU);
+    ``None`` re-resolves the default (env override / platform detect)."""
     global _INTERPRET
     _INTERPRET = v
     _CACHE.clear()
@@ -36,6 +59,9 @@ def get_interpret() -> bool:
     """Whether the sweep currently runs in Pallas interpret mode (the
     benchmarks record this: interpret-mode timings measure interpreter
     overhead, not device performance)."""
+    global _INTERPRET
+    if _INTERPRET is None:
+        _INTERPRET = _default_interpret()
     return _INTERPRET
 
 
@@ -64,7 +90,7 @@ class PallasEngine(Engine):
         from ...kernels import bfs_sweep
 
         return bfs_sweep.bfs_rows(ev.nbr, sources, ev.sentinel,
-                                  interpret=_INTERPRET)
+                                  interpret=get_interpret())
 
 
 # ------------------------------------------------------------------------------
@@ -96,7 +122,7 @@ def _sharded_fn(r: int, n: int, kmax: int, sw_pad: int, bw: int, m: int,
     def per_shard(nb, vm, F0):
         if use_pallas:
             rows = bfs_sweep._pallas_sweep(
-                nb.shape[0], n, kmax, sw_pad, bw, sentinel, _INTERPRET
+                nb.shape[0], n, kmax, sw_pad, bw, sentinel, get_interpret()
             )(nb, vm, F0)
         else:
             rows = jax.vmap(
@@ -145,3 +171,106 @@ def sharded_rows_totals(
     rowsums, mx = _sharded_fn(r, n, kmax, sw_pad, bw, m, sentinel,
                               use_pallas)(nb, vm, F0)
     return np.asarray(rowsums).sum(1, dtype=np.int64), np.asarray(mx)
+
+
+# ------------------------------------------------------------------------------
+# Replica-sharded delta pricing (incremental APSP on the device path)
+# ------------------------------------------------------------------------------
+
+def _sharded_delta_fn(r: int, mprop: int, n: int, kmax: int, s: int,
+                      sw_pad: int, bw: int, mmax: int, amax: int,
+                      sentinel: int, use_pallas: bool):
+    jax = _jax()
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ... import compat
+    from ...kernels import bfs_sweep
+
+    interpret = get_interpret()
+    key = ("delta", r, mprop, n, kmax, s, sw_pad, bw, mmax, amax, sentinel,
+           use_pallas, interpret)
+    fn = _CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    def per_shard(base, nb, vm, F0, ids, crow_src, crow_shift, pts_idx,
+                  pmask, add_i, add_j, add_w):
+        # base is (r_sh, s, n); the proposal arrays are (r_sh * mprop, ...)
+        # in replica-major order, so repeating base rows M times lines the
+        # two batch layouts up within the shard
+        bs = nb.shape[0]
+        if use_pallas:
+            rows = bfs_sweep._pallas_sweep(
+                bs, n, kmax, sw_pad, bw, sentinel, interpret)(nb, vm, F0)
+        else:
+            rows = jax.vmap(functools.partial(
+                bfs_sweep.sweep_rows_ref, sentinel=sentinel))(nb, vm, F0)
+        baseb = jnp.repeat(base, mprop, axis=0)
+        # merge: re-swept rows replace their representative rows, idle lanes
+        # (id == s, out of range) drop; unaffected rows are provably exact
+        merged = jax.vmap(
+            lambda bb, rw, ii: bb.at[ii].set(rw, mode="drop")
+        )(baseb, rows, ids)
+        tmp, crows = jax.vmap(bfs_sweep.patch_prologue)(
+            merged, crow_src, crow_shift, pts_idx, pmask, add_i, add_j, add_w)
+        if use_pallas:
+            out = bfs_sweep._pallas_patch(bs, s, n, mmax, interpret)(
+                merged, tmp, crows)
+        else:
+            out = bfs_sweep.patch_apply_ref(merged, tmp, crows)
+        # int32 row sums: n * sentinel <= 2^31 - 1 guarded by the caller
+        return out.sum(2, dtype=jnp.int32), out.max((1, 2)), out
+
+    nd = _mesh_axis(r)
+    mesh = Mesh(np.asarray(jax.devices()[:nd]), ("r",))
+    fn = jax.jit(compat.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P("r"),) * 12, out_specs=(P("r"), P("r"), P("r"))))
+    _CACHE[key] = fn
+    return fn
+
+
+def sharded_delta_state(
+    base: np.ndarray,
+    nbrs: np.ndarray,
+    sources_list,
+    patches,
+    sentinel: int,
+    use_pallas: bool = True,
+):
+    """Price b = R*M proposal graphs *incrementally* in one device dispatch.
+
+    The delta twin of ``sharded_rows_totals``: instead of re-sweeping every
+    representative row of every proposal, each proposal re-sweeps only its
+    ``sources_list[i]`` rows (the affected set from the host-side batched
+    lost-parent test) on its ``nbrs[i]`` (n, kmax) table — the post-removal
+    graph — merges them into its chain's ``base`` (R, s, n) rows, and applies
+    the min-plus insert patch for ``patches[i]`` (the added edge list, or
+    None).  Full-rebuild proposals are expressed in the same vocabulary:
+    all rows affected, post-swap table, no patch.  Proposal i belongs to
+    chain ``i // M`` (replica-major order, M = b // R proposals per chain).
+
+    Returns ``(totals (b,) int64, maxima (b,) int32, state)`` where state is
+    the (b, s, n) post-swap representative rows (a device array; callers
+    slice the accepted proposals).  Exact integer hop counts: bit-identical
+    to the full sweep, per the property tests.
+    """
+    from ...kernels import bfs_sweep
+
+    r, s, n = base.shape
+    b, _, kmax = nbrs.shape
+    if b % r:
+        raise ValueError(f"proposal batch {b} is not a multiple of replicas {r}")
+    if n * sentinel > np.iinfo(np.int32).max:
+        raise NotImplementedError(
+            f"device pricing needs n * sentinel <= int32 max (n={n}, "
+            f"sentinel={sentinel})")
+    nb, vm, F0, ids, sw_pad, bw = bfs_sweep.pack_delta_batch(
+        nbrs, sources_list, s)
+    patch = bfs_sweep.pack_patch(patches, s)
+    mmax, amax = patch[2].shape[1], patch[4].shape[1]
+    rowsums, mx, state = _sharded_delta_fn(
+        r, b // r, n, kmax, s, sw_pad, bw, mmax, amax, sentinel, use_pallas)(
+        np.ascontiguousarray(base), nb, vm, F0, ids, *patch)
+    return np.asarray(rowsums).sum(1, dtype=np.int64), np.asarray(mx), state

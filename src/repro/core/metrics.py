@@ -222,6 +222,41 @@ def _removal_affected(dist: np.ndarray, npar: np.ndarray, removed) -> np.ndarray
     return aff
 
 
+def _parent_count_cols(dist: np.ndarray, nbr: np.ndarray, cols) -> np.ndarray:
+    """``_parent_counts`` restricted to the vertex columns ``cols``:
+    (rows, len(cols)) int16 from an O(rows x len(cols) x kmax) gather, so
+    callers that only probe a few columns (the removal test probes the
+    removed edges' endpoints) need not maintain the full (rows, n) table."""
+    cols = np.asarray(cols, dtype=np.int64)
+    nb = nbr[cols]
+    valid = nb >= 0
+    nbx = np.where(valid, nb, 0)
+    return (((dist[:, nbx] + np.int32(1)) == dist[:, cols][:, :, None])
+            & valid[None, :, :]).sum(-1, dtype=np.int16)
+
+
+def _removal_affected_nbr(dist: np.ndarray, nbr: np.ndarray, removed) -> np.ndarray:
+    """``_removal_affected`` with the parent counts gathered on demand from
+    the neighbour table instead of a maintained (rows, n) count table — the
+    counts are only ever read at the removed edges' endpoint columns, so the
+    host-side test of the device delta tier stays O(rows x endpoints x kmax)
+    per proposal."""
+    pts = sorted({x for e in removed for x in e})
+    idx = {p: i for i, p in enumerate(pts)}
+    npc = _parent_count_cols(dist, nbr, pts)
+    aff = np.zeros(dist.shape[0], dtype=bool)
+    lost: dict[int, np.ndarray] = {}
+    for a, b in removed:
+        da, db = dist[:, a], dist[:, b]
+        pa_of_b = (da + 1 == db).astype(np.int16)
+        pa_of_a = (db + 1 == da).astype(np.int16)
+        lost[b] = pa_of_b if b not in lost else lost[b] + pa_of_b
+        lost[a] = pa_of_a if a not in lost else lost[a] + pa_of_a
+    for x, cnt in lost.items():
+        aff |= (cnt > 0) & (cnt == npc[:, idx[x]])
+    return aff
+
+
 @dataclasses.dataclass
 class SwapToken:
     """Pending result of ``IncrementalAPSP.evaluate_swap`` (commit to apply)."""

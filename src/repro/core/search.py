@@ -89,6 +89,7 @@ class SearchResult:
     replicas: int = 1
     evals_delta: int = 0  # incremental evaluations (delta path)
     evals_full: int = 0  # full-recompute fallbacks
+    device_dispatches: int = 0  # shard_map pricing dispatches (device tiers)
     offsets: tuple[int, ...] | None = None  # circulant offsets, if applicable
     compound_steps: int = 0  # multi-orbit proposals priced (moves_per_step > 1)
     objective_value: float | None = None  # non-MPL objective score (e.g.
@@ -983,10 +984,16 @@ def symmetric_sa_search(
 
 class _PolishChain:
     """One replica of the device-priced orbit polish: host-side orbit state
-    plus the padded neighbour table the device sweep prices from."""
+    plus the padded neighbour table the device sweep prices from.  Under
+    delta pricing the chain also mirrors its representative-row distance
+    state (``dist``) — the batched lost-parent removal test gathers parent
+    counts from it on demand — plus the ``best_dist`` snapshot replica
+    exchange restores from.  The mirrors are rebound, never mutated in
+    place, so snapshots are safe by reference."""
 
     __slots__ = ("rng", "orb_list", "chord_edges", "adj", "nbr",
-                 "cur_mpl", "cur_d", "best_orbits", "best_mpl", "best_d", "t")
+                 "cur_mpl", "cur_d", "best_orbits", "best_mpl", "best_d", "t",
+                 "dist", "best_dist")
 
     def __init__(self, rng, orb_list, adj, t_start):
         self.rng = rng
@@ -998,6 +1005,7 @@ class _PolishChain:
         self.cur_mpl = self.cur_d = float("inf")
         self.best_orbits = set(self.orb_list)
         self.best_mpl = self.best_d = float("inf")
+        self.dist = self.best_dist = None
 
     def trial_nbr(self, removed, added) -> np.ndarray:
         """Neighbour table of the proposal graph (degrees are conserved by
@@ -1029,6 +1037,26 @@ class _PolishChain:
         self.cur_mpl, self.cur_d = mpl, d
 
 
+def _resync_check(chains, s: int, n: int, use_pallas: bool) -> None:
+    """Drift guard for the delta-priced polish: re-sweep every chain's
+    current graph from scratch in one dispatch and assert the maintained
+    incremental distance state matches bit-for-bit.  Raises
+    ``AssertionError`` (not RuntimeError — the ``large_search`` try-block
+    must not swallow a correctness failure) on any divergence."""
+    from .engines import pallas_sweep
+
+    base = np.stack([ch.dist for ch in chains])
+    nbrs = np.stack([ch.nbr for ch in chains]).astype(np.int32, copy=False)
+    _, _, state = pallas_sweep.sharded_delta_state(
+        base, nbrs, [np.arange(s)] * len(chains), [None] * len(chains), n,
+        use_pallas=use_pallas)
+    for r, ch in enumerate(chains):
+        if not np.array_equal(np.asarray(state[r]), ch.dist):
+            raise AssertionError(
+                f"delta pricing drift: replica {r} incremental distance "
+                f"state diverged from the full re-sweep")
+
+
 def _replica_polish(
     n: int,
     k: int,
@@ -1041,26 +1069,48 @@ def _replica_polish(
     exchange_every: int = 50,
     t_start: float = 0.05,
     t_end: float = 1e-4,
+    delta: bool = True,
+    proposal_batch: int = 1,
+    resync_every: int = 64,
+    full_rebuild_frac: float = 0.9,
 ) -> SearchResult:
     """Parallel-replica orbit polish with device-batched pricing.
 
     ``replicas`` lockstep annealing chains share the circulant warm start,
     each on its own PRNG stream (``[seed, r]``, replica 0 protected — the
-    ``sa_search`` exchange semantics).  Every iteration each chain draws one
-    orbit swap; the proposals' full representative-row BFS sweeps are then
-    priced in **one** device dispatch: the R neighbour tables are stacked
-    and pushed through ``engines.pallas_sweep.sharded_rows_totals``, a
-    ``shard_map`` over the replica mesh axis, so each device sweeps its
-    replicas' graphs in VMEM (the Pallas kernel when the resolved engine is
-    the device sweep, its jnp twin otherwise) and only per-replica
-    (total, max) scalars come home.  Pricing is exact integer hop counts, so
-    the walk is bit-reproducible per seed and engine-independent.
+    ``sa_search`` exchange semantics).  Every iteration each chain draws
+    ``proposal_batch`` orbit swaps; all R*M proposals are then priced in
+    **one** device dispatch — a ``shard_map`` over the replica mesh axis, so
+    each device prices its replicas' proposals locally (the Pallas kernels
+    when the resolved engine is the device sweep, their jnp twins otherwise)
+    and only per-proposal (total, max) scalars come home.
+
+    With ``delta=True`` (default) the dispatch is the incremental-APSP twin
+    ``sharded_delta_state``: each chain host-mirrors its representative-row
+    distances, the batched lost-parent test (parent counts gathered on
+    demand at the removed endpoints) marks the rows a removal touches, and
+    the device re-sweeps only those rows on
+    the post-removal graph before min-plus patching the added edges back in
+    — the ``SymmetricAPSP`` algorithm, vectorized over proposals.  Proposals
+    whose affected set exceeds ``full_rebuild_frac`` of the rows (or whose
+    base is disconnected) fall back to a full re-sweep expressed in the same
+    vocabulary.  Every ``resync_every`` iterations (and at the end) a full
+    re-sweep asserts the incremental state has not drifted.  Pricing is
+    exact integer hop counts either way, so ``delta`` changes wall time
+    only: per seed the trajectory is bit-identical to ``delta=False``.
+
+    Batched proposals are accepted greedily in lockstep order: once a
+    chain accepts, the rest of its batch was priced against a stale base
+    and is discarded (no RNG is consumed for discarded proposals), so
+    ``proposal_batch=1`` reproduces the unbatched trajectory exactly.
 
     Every ``exchange_every`` iterations the globally best state replaces the
     worst non-protected chain, exactly like ``sa_search``.
     """
     from .engines import pallas_sweep
 
+    if proposal_batch < 1:
+        raise ValueError(f"proposal_batch must be >= 1, got {proposal_batch}")
     use_pallas = engines.resolve_rows(engine).device_sweep
     s = n // fold
     gamma = math.exp(math.log(t_end / t_start) / n_iter)
@@ -1080,74 +1130,139 @@ def _replica_polish(
                            adj_of(start), t_start)
               for r in range(replicas)]
     norm = s * (n - 1)
+    dispatches = 1
     # all chains share the warm start: one stacked pricing seeds cur/best
-    tot0, mx0 = pallas_sweep.sharded_rows_totals(
-        np.stack([chains[0].nbr]), s, n, use_pallas=use_pallas)
+    if delta:
+        tot0, mx0, st0 = pallas_sweep.sharded_delta_state(
+            np.zeros((1, s, n), dtype=np.int32), np.stack([chains[0].nbr]),
+            [np.arange(s)], [None], n, use_pallas=use_pallas)
+        dist0 = np.asarray(st0[0])
+        for ch in chains:
+            ch.dist, ch.best_dist = dist0, dist0
+    else:
+        tot0, mx0 = pallas_sweep.sharded_rows_totals(
+            np.stack([chains[0].nbr]), s, n, use_pallas=use_pallas)
     mpl0 = tot0[0] / norm if mx0[0] < n else float("inf")
     d0 = float(mx0[0]) if mx0[0] < n else float("inf")
     for ch in chains:
         ch.cur_mpl = ch.best_mpl = mpl0
         ch.cur_d = ch.best_d = d0
 
+    mprop = proposal_batch
+    bsz = replicas * mprop
     accepted = 0
-    priced = 0
+    evals_delta = evals_full = 0
     history = [mpl0]
     global_best = (mpl0, d0)
-    nbr_stack = np.empty((replicas,) + chains[0].nbr.shape, dtype=np.int32)
+    nbr_stack = np.empty((bsz,) + chains[0].nbr.shape, dtype=np.int32)
+    empty = np.empty(0, dtype=np.int64)
     for it in range(n_iter):
-        proposals: list = [None] * replicas
+        proposals: list = [None] * bsz
+        srcs: list = [empty] * bsz
+        patches: list = [None] * bsz
         for r, ch in enumerate(chains):
             ch.t *= gamma
-            nbr_stack[r] = ch.nbr  # invalid draws price the unchanged graph
-            if len(ch.orb_list) < 2:
-                continue
-            mv = _draw_orbit_swap(ch.rng, ch.orb_list, ch.chord_edges,
-                                  ring_edges, n, s, fold)
-            if mv is None:
-                continue
-            i1, i2, no1, no2, new_edges, remaining = mv
-            work_list = [o for idx, o in enumerate(ch.orb_list)
-                         if idx not in (i1, i2)] + [no1, no2]
-            work_chords = remaining | new_edges
-            removed = sorted(ch.chord_edges - work_chords)
-            added = sorted(work_chords - ch.chord_edges)
-            tn = ch.trial_nbr(removed, added)
-            nbr_stack[r] = tn
-            proposals[r] = (removed, added, work_list, work_chords, tn)
-        if not any(p is not None for p in proposals):
-            continue
-        totals, maxima = pallas_sweep.sharded_rows_totals(
-            nbr_stack, s, n, use_pallas=use_pallas)
-        for r, ch in enumerate(chains):
-            if proposals[r] is None:
-                continue
-            priced += 1
-            new_mpl = totals[r] / norm if maxima[r] < n else float("inf")
-            new_d = float(maxima[r]) if maxima[r] < n else float("inf")
-            dm = new_mpl - ch.cur_mpl
-            if not (dm < 0 or ch.rng.random() < math.exp(-dm / max(ch.t, 1e-12))):
-                continue
-            ch.commit(*proposals[r], new_mpl, new_d)
-            accepted += 1
-            if (ch.cur_mpl, ch.cur_d) < (ch.best_mpl, ch.best_d):
-                ch.best_orbits = set(ch.orb_list)
-                ch.best_mpl, ch.best_d = ch.cur_mpl, ch.cur_d
-                if (ch.best_mpl, ch.best_d) < global_best:
-                    global_best = (ch.best_mpl, ch.best_d)
-                    history.append(ch.best_mpl)
-        if replicas > 1 and (it + 1) % exchange_every == 0 and it + 1 < n_iter:
-            gb = min(range(replicas),
-                     key=lambda r: (chains[r].best_mpl, chains[r].best_d, r))
-            worst = max(range(1, replicas),
-                        key=lambda r: (chains[r].cur_mpl, chains[r].cur_d, -r))
-            if (chains[gb].best_mpl, chains[gb].best_d) < \
-                    (chains[worst].cur_mpl, chains[worst].cur_d):
-                ch = chains[worst]
-                ch.orb_list = sorted(chains[gb].best_orbits, key=sorted)
-                ch.chord_edges = {e for orb in ch.orb_list for e in orb}
-                ch.adj = adj_of(ch.orb_list)
-                ch.nbr = metrics._nbr_table(ch.adj)
-                ch.cur_mpl, ch.cur_d = chains[gb].best_mpl, chains[gb].best_d
+            for m in range(mprop):
+                slot = r * mprop + m
+                nbr_stack[slot] = ch.nbr  # idle slots price the unchanged graph
+                if len(ch.orb_list) < 2:
+                    continue
+                mv = _draw_orbit_swap(ch.rng, ch.orb_list, ch.chord_edges,
+                                      ring_edges, n, s, fold)
+                if mv is None:
+                    continue
+                i1, i2, no1, no2, new_edges, remaining = mv
+                work_list = [o for idx, o in enumerate(ch.orb_list)
+                             if idx not in (i1, i2)] + [no1, no2]
+                work_chords = remaining | new_edges
+                removed = sorted(ch.chord_edges - work_chords)
+                added = sorted(work_chords - ch.chord_edges)
+                if delta:
+                    aff = metrics._removal_affected_nbr(ch.dist, ch.nbr,
+                                                        removed)
+                    full = (ch.cur_d == float("inf")
+                            or int(aff.sum()) > full_rebuild_frac * s)
+                    if full:
+                        nbr_stack[slot] = ch.trial_nbr(removed, added)
+                        srcs[slot] = np.arange(s)
+                        evals_full += 1
+                    else:
+                        # re-sweep only the affected rows on the post-removal
+                        # graph; the added edges come back as a min-plus patch
+                        nbr_stack[slot] = ch.trial_nbr(removed, ())
+                        srcs[slot] = np.nonzero(aff)[0]
+                        patches[slot] = added
+                        evals_delta += 1
+                    proposals[slot] = (removed, added, work_list, work_chords,
+                                       None)
+                else:
+                    nbr_stack[slot] = tn = ch.trial_nbr(removed, added)
+                    evals_full += 1
+                    proposals[slot] = (removed, added, work_list, work_chords,
+                                       tn)
+        if any(p is not None for p in proposals):
+            if delta:
+                totals, maxima, states = pallas_sweep.sharded_delta_state(
+                    np.stack([ch.dist for ch in chains]), nbr_stack, srcs,
+                    patches, n, use_pallas=use_pallas)
+            else:
+                totals, maxima = pallas_sweep.sharded_rows_totals(
+                    nbr_stack, s, n, use_pallas=use_pallas)
+                states = None
+            dispatches += 1
+            state_np = None  # whole-batch device->host pull, once per dispatch
+            for r, ch in enumerate(chains):
+                committed = False
+                for m in range(mprop):
+                    slot = r * mprop + m
+                    if proposals[slot] is None or committed:
+                        continue  # discarded batch slots consume no RNG
+                    new_mpl = (totals[slot] / norm if maxima[slot] < n
+                               else float("inf"))
+                    new_d = (float(maxima[slot]) if maxima[slot] < n
+                             else float("inf"))
+                    dm = new_mpl - ch.cur_mpl
+                    if not (dm < 0
+                            or ch.rng.random() < math.exp(-dm / max(ch.t, 1e-12))):
+                        continue
+                    removed, added, work_list, work_chords, tn = proposals[slot]
+                    if tn is None:  # delta slots carry the post-removal table
+                        tn = ch.trial_nbr(removed, added)
+                    ch.commit(removed, added, work_list, work_chords, tn,
+                              new_mpl, new_d)
+                    if delta:
+                        if state_np is None:
+                            state_np = np.asarray(states)
+                        ch.dist = state_np[slot]
+                    committed = True
+                    accepted += 1
+                    if (ch.cur_mpl, ch.cur_d) < (ch.best_mpl, ch.best_d):
+                        ch.best_orbits = set(ch.orb_list)
+                        ch.best_mpl, ch.best_d = ch.cur_mpl, ch.cur_d
+                        if delta:
+                            ch.best_dist = ch.dist
+                        if (ch.best_mpl, ch.best_d) < global_best:
+                            global_best = (ch.best_mpl, ch.best_d)
+                            history.append(ch.best_mpl)
+            if replicas > 1 and (it + 1) % exchange_every == 0 and it + 1 < n_iter:
+                gb = min(range(replicas),
+                         key=lambda r: (chains[r].best_mpl, chains[r].best_d, r))
+                worst = max(range(1, replicas),
+                            key=lambda r: (chains[r].cur_mpl, chains[r].cur_d, -r))
+                if (chains[gb].best_mpl, chains[gb].best_d) < \
+                        (chains[worst].cur_mpl, chains[worst].cur_d):
+                    ch = chains[worst]
+                    ch.orb_list = sorted(chains[gb].best_orbits, key=sorted)
+                    ch.chord_edges = {e for orb in ch.orb_list for e in orb}
+                    ch.adj = adj_of(ch.orb_list)
+                    ch.nbr = metrics._nbr_table(ch.adj)
+                    ch.cur_mpl, ch.cur_d = chains[gb].best_mpl, chains[gb].best_d
+                    if delta:
+                        ch.dist = chains[gb].best_dist
+        if delta and (it + 1 == n_iter
+                      or (resync_every and (it + 1) % resync_every == 0)):
+            _resync_check(chains, s, n, use_pallas)
+            dispatches += 1
 
     gb = min(range(replicas),
              key=lambda r: (chains[r].best_mpl, chains[r].best_d, r))
@@ -1166,7 +1281,9 @@ def _replica_polish(
         accepted=accepted,
         history=history,
         replicas=replicas,
-        evals_full=priced,  # device pricing always sweeps the full rows
+        evals_delta=evals_delta,
+        evals_full=evals_full,
+        device_dispatches=dispatches,
     )
 
 
@@ -1184,6 +1301,10 @@ def large_search(
     engine: str | None = None,
     replicas: int = 1,
     exchange_every: int = 50,
+    delta: bool = True,
+    proposal_batch: int = 1,
+    resync_every: int = 64,
+    polish_iters: int | None = None,
 ) -> SearchResult:
     """Large-N tier: fast circulant hillclimb, then orbit-level SA polish
     warm-started from the best circulant (when ``fold`` divides ``n``).
@@ -1202,7 +1323,16 @@ def large_search(
     — the ``sa_search`` semantics) whose proposals are priced in one
     ``shard_map`` dispatch per iteration, each device sweeping its replicas'
     packed-frontier BFS locally — the Pallas VMEM kernel when
-    ``engine="pallas"``, its jitted jnp twin otherwise.
+    ``engine="pallas"``, its jitted jnp twin otherwise.  By default the
+    dispatch prices **incrementally** (``delta=True``: affected-rows-only
+    re-sweep plus min-plus patch, the device twin of ``SymmetricAPSP``) with
+    a periodic full-sweep drift guard every ``resync_every`` iterations;
+    ``delta=False`` forces the full re-sweep of every proposal, bit-identical
+    per seed but slower.  ``proposal_batch`` prices M candidate swaps per
+    chain per dispatch (accepted greedily in lockstep order) to amortize
+    dispatch overhead; ``polish_iters`` overrides the polish iteration count
+    derived from ``budget`` (it applies to the single-replica symmetric
+    polish too).
 
     ``engine`` is forwarded to the polish stage (and through it to the
     ``core.engines`` registry, which validates it): ``None``/``"auto"``
@@ -1232,16 +1362,20 @@ def large_search(
         res_c = circulant_search(n, k, seed=seed, n_iter=budget or 400)
     if not polish or n % fold or res_c.offsets is None:
         return res_c
+    n_polish = (polish_iters if polish_iters is not None
+                else max(200, (budget or 400) * 2))
     try:
         orbits = _circulant_orbits(n, n // fold, res_c.offsets)
         if replicas > 1:
             res_s = _replica_polish(
-                n, k, seed=seed, n_iter=max(200, (budget or 400) * 2),
+                n, k, seed=seed, n_iter=n_polish,
                 fold=fold, start_orbits=orbits, engine=engine,
-                replicas=replicas, exchange_every=exchange_every)
+                replicas=replicas, exchange_every=exchange_every,
+                delta=delta, proposal_batch=proposal_batch,
+                resync_every=resync_every)
         else:
             res_s = symmetric_sa_search(
-                n, k, seed=seed, n_iter=max(200, (budget or 400) * 2),
+                n, k, seed=seed, n_iter=n_polish,
                 fold=fold, start_orbits=orbits, engine=engine)
     except (RuntimeError, ValueError):  # pragma: no cover - defensive
         return res_c

@@ -41,15 +41,25 @@ import numpy as np
 
 WORD = 32  # uint32 packing: TPU-safe (no 64-bit vector lanes)
 BLOCK_WORDS = 4  # source words per grid cell (128 sources)
+# "unreachable" weight for masked patch entries: real hop distances are
+# <= sentinel = n <= 46340, and the patch adds at most two PATCH_INF terms
+# plus one distance (2^21 + n), so int32 arithmetic never overflows while
+# masked terms can never undercut a real path
+PATCH_INF = np.int32(1 << 20)
 
 __all__ = [
     "WORD",
     "BLOCK_WORDS",
+    "PATCH_INF",
     "bfs_rows",
     "bfs_rows_batched",
     "pack_batch",
+    "pack_delta_batch",
     "pack_frontier",
     "pack_nbr",
+    "pack_patch",
+    "patch_apply_ref",
+    "patch_prologue",
     "sweep_rows_ref",
 ]
 
@@ -216,3 +226,181 @@ def bfs_rows(
     out = bfs_rows_batched(nbr[None], np.asarray(sources), sentinel,
                            interpret=interpret, block_words=block_words)
     return np.asarray(out[0])
+
+
+# ------------------------------------------------------------------------------
+# Delta sweep: incremental pricing of batched orbit swaps (the device twin of
+# ``metrics.SymmetricAPSP.evaluate_swap``).  The host runs the exact batched
+# lost-parent removal test against its mirrored (dist, npar) state and packs,
+# per proposal, only the *affected* representative rows as the seed frontier;
+# the sweep then repairs those rows on the post-removal graph, the merged
+# state keeps the provably-unchanged rows, and the min-plus insert patch
+# applies the added edges — exact integer hop counts end to end, so the delta
+# path is bit-identical to a full re-sweep (property-tested).
+# ------------------------------------------------------------------------------
+
+def _pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1) — pads variable per-iteration
+    shapes (affected-row words, patch endpoints) into a bounded bucket set so
+    the jit/pallas caches stay small."""
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def pack_delta_batch(
+    nbrs: np.ndarray,
+    sources_list,
+    n_rows: int,
+    block_words: int = BLOCK_WORDS,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int, int]:
+    """Pack per-proposal restricted frontiers for the batched delta sweep.
+
+    Unlike ``pack_batch`` (one shared source set broadcast to every graph),
+    each of the b proposals sweeps its own affected-row set.  Returns
+    ``(nb, vm, F0, ids, sw_pad, bw)``: ``ids[r, j]`` is the representative
+    row swept by packed lane j of proposal r, padded with ``n_rows`` so the
+    merge scatter drops the idle lanes.  ``sw_pad`` is bucketed to a power
+    of two (a bounded compile-cache footprint across iterations).
+    """
+    b, n, kmax = nbrs.shape
+    mx = max((len(src) for src in sources_list), default=0)
+    sw = _pow2((mx + WORD - 1) // WORD)
+    bw = min(block_words, sw)
+    sw_pad = -(-sw // bw) * bw
+    nb = np.empty((b, n, kmax), dtype=np.int32)
+    vm = np.empty((b, n, kmax), dtype=np.uint32)
+    F0 = np.empty((b, n, sw_pad), dtype=np.uint32)
+    ids = np.full((b, sw_pad * WORD), n_rows, dtype=np.int32)
+    for r in range(b):
+        nb[r], vm[r] = pack_nbr(nbrs[r])
+        src = np.asarray(sources_list[r], dtype=np.int64)
+        F0[r] = pack_frontier(n, src, sw_pad)
+        ids[r, : len(src)] = src
+    return nb, vm, F0, ids, sw_pad, bw
+
+
+def pack_patch(patches, s: int) -> tuple[np.ndarray, ...]:
+    """Pack per-proposal min-plus insert patches for the delta sweep.
+
+    ``patches[r]`` is the proposal's added edge list (empty/None for no
+    patch).  Returns the seven padded arrays ``patch_prologue`` consumes:
+    rolled-row gather metadata (``crow_src``, ``crow_shift``), the endpoint
+    index set (``pts_idx``, ``pmask``) and the added-edge clamp
+    (``add_i``, ``add_j``, ``add_w``).  Endpoint/edge counts are bucketed to
+    powers of two; masked slots carry ``PATCH_INF`` weights so they can
+    never undercut a real path.
+    """
+    b = len(patches)
+    pts_all = [sorted({x for e in (p or ()) for x in e}) for p in patches]
+    mmax = _pow2(max((len(p) for p in pts_all), default=0))
+    amax = _pow2(max((len(p or ()) for p in patches), default=0))
+    crow_src = np.zeros((b, mmax), dtype=np.int32)
+    crow_shift = np.zeros((b, mmax), dtype=np.int32)
+    pts_idx = np.zeros((b, mmax), dtype=np.int32)
+    pmask = np.zeros((b, mmax), dtype=bool)
+    add_i = np.zeros((b, amax), dtype=np.int32)
+    add_j = np.zeros((b, amax), dtype=np.int32)
+    add_w = np.full((b, amax), PATCH_INF, dtype=np.int32)
+    for r, added in enumerate(patches):
+        pts = pts_all[r]
+        if not pts:
+            continue
+        idx = {p: i for i, p in enumerate(pts)}
+        m = len(pts)
+        crow_src[r, :m] = [p % s for p in pts]
+        crow_shift[r, :m] = [p - p % s for p in pts]
+        pts_idx[r, :m] = pts
+        pmask[r, :m] = True
+        for a, (u, v) in enumerate(added):
+            add_i[r, a], add_j[r, a], add_w[r, a] = idx[u], idx[v], 1
+    return crow_src, crow_shift, pts_idx, pmask, add_i, add_j, add_w
+
+
+def patch_prologue(new, crow_src, crow_shift, pts_idx, pmask, add_i, add_j,
+                   add_w):
+    """Per-proposal patch head (jnp): rolled endpoint rows + min-plus closure.
+
+    ``new`` is the merged (s, n) post-removal state of one proposal.  The
+    post-removal graph is still rotationally symmetric, so the full row of
+    any added-edge endpoint p is ``roll(new[p % s], p - p % s)``; a
+    Floyd–Warshall closure over the (masked) endpoint set with the added
+    edges clamped to weight 1 gives exact endpoint-to-endpoint distances —
+    the same integer math as ``SymmetricAPSP._insert_patch``, with
+    ``PATCH_INF`` in masked slots (bucketed shapes) instead of dropping
+    them.  Returns ``(tmp, crows)``: ``tmp[r, j] = min_p new[r, p] + w[p, j]``
+    and the rolled rows, everything ``patch_apply_ref`` (or the Pallas patch
+    kernel) needs for the O(s * n * m) passes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    mmax = pts_idx.shape[0]
+    crows = jax.vmap(lambda r, sh: jnp.roll(new[r], sh))(crow_src, crow_shift)
+    ok = pmask[:, None] & pmask[None, :]
+    w = jnp.where(ok, jnp.take(crows, pts_idx, axis=1), PATCH_INF)
+    w = w.at[add_i, add_j].min(add_w)
+    w = w.at[add_j, add_i].min(add_w)
+    for kk in range(mmax):  # static unroll: mmax <= a few dozen endpoints
+        w = jnp.minimum(w, w[:, kk : kk + 1] + w[kk : kk + 1, :])
+    a = jnp.where(pmask[None, :], jnp.take(new, pts_idx, axis=1), PATCH_INF)
+    tmp = (a[:, :, None] + w[None, :, :]).min(axis=1)
+    return tmp, crows
+
+
+def patch_apply_ref(dist, tmp, crows):
+    """Batched min-plus patch application (jnp twin of the Pallas kernel):
+    ``d'(r, y) = min(d(r, y), min_j tmp[r, j] + crows[j, y])`` over the
+    (b, s, n) merged states."""
+    import jax.numpy as jnp
+
+    mmax = crows.shape[1]
+    for j in range(mmax):  # static unroll, one vectorized pass per endpoint
+        dist = jnp.minimum(dist, tmp[:, :, j : j + 1] + crows[:, j : j + 1, :])
+    return dist
+
+
+def _patch_kernel(dist_ref, tmp_ref, crows_ref, out_ref, *, mmax):
+    # one grid cell = one (proposal, row-block) pair: the O(rb * n * m)
+    # min-plus passes run with the distance tile, endpoint rows and tmp
+    # staged in VMEM
+    import jax.numpy as jnp
+
+    d = dist_ref[0]
+    tmp = tmp_ref[0]
+    crows = crows_ref[0]
+    for j in range(mmax):
+        d = jnp.minimum(d, tmp[:, j : j + 1] + crows[j : j + 1, :])
+    out_ref[0] = d
+
+
+def _row_block(s: int, cap: int = 128) -> int:
+    """Largest divisor of ``s`` at most ``cap`` — the patch kernel's row-tile
+    height (keeps the (rb, n) distance tile inside the VMEM budget)."""
+    return max(d for d in range(1, min(s, cap) + 1) if s % d == 0)
+
+
+def _pallas_patch(b: int, s: int, n: int, mmax: int, interpret: bool):
+    """Compiled batched patch for (b, s, n)/(b, s, mmax)/(b, mmax, n) inputs."""
+    import jax
+    from jax.experimental import pallas as pl
+
+    rb = _row_block(s)
+    key = ("patch", b, s, n, mmax, rb, interpret)
+    fn = _CACHE.get(key)
+    if fn is not None:
+        return fn
+    kernel = functools.partial(_patch_kernel, mmax=mmax)
+    fn = pl.pallas_call(
+        kernel,
+        grid=(b, s // rb),
+        in_specs=[
+            pl.BlockSpec((1, rb, n), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, rb, mmax), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, mmax, n), lambda r, i: (r, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rb, n), lambda r, i: (r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, n), jax.numpy.int32),
+        interpret=interpret,
+    )
+    fn = jax.jit(fn)
+    _CACHE[key] = fn
+    return fn

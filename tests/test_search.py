@@ -273,6 +273,163 @@ def test_replica_polish_multi_device_invariant(devices8):
         f"{res.mpl} {res.diameter} {res.accepted} {hash(res.graph.edges)}"
 
 
+def _polish_pair(n, k, fold, seed, replicas, engine=None, n_iter=25, **kw):
+    """(delta, full) `_replica_polish` runs from the same circulant warm
+    start — the property under test is bit-identical trajectories."""
+    from repro.core.search import _circulant_orbits, _replica_polish
+
+    offs = (2, 9) if k == 4 else (2, 9, 17)
+    orbits = _circulant_orbits(n, n // fold, offs)
+    run = lambda delta: _replica_polish(  # noqa: E731
+        n, k, seed=seed, n_iter=n_iter, fold=fold, start_orbits=orbits,
+        engine=engine, replicas=replicas, exchange_every=10, delta=delta, **kw)
+    return run(True), run(False)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("replicas", [2, 3])
+def test_replica_polish_delta_matches_full_sweep_trajectory(seed, replicas):
+    """Delta pricing (affected-rows re-sweep + min-plus patch) is bit-
+    identical to the full-sweep dispatch per seed and replica count: exact
+    integer hop counts mean the accept decisions — hence the trajectory,
+    history and final graph — cannot diverge.  engine=None resolves through
+    the registry, so the CI engine matrix re-runs this under every
+    REPRO_ENGINE (the Pallas kernel path included)."""
+    d, f = _polish_pair(64, 4, 4, seed, replicas)
+    assert d.graph.edges == f.graph.edges
+    assert d.mpl == f.mpl and d.diameter == f.diameter
+    assert d.history == f.history and d.accepted == f.accepted
+    # the observability contract: the split reports which pricer ran
+    assert d.evals_delta + d.evals_full == f.evals_full
+    assert d.evals_delta > 0 and f.evals_delta == 0
+    assert d.device_dispatches > 0 and f.device_dispatches > 0
+
+
+def test_replica_polish_delta_pallas_matches_jnp_twin():
+    """The Pallas delta kernels (restricted sweep + min-plus patch tiles)
+    and their jnp twins price identical trajectories."""
+    from repro.core.search import _circulant_orbits, _replica_polish
+
+    orbits = _circulant_orbits(48, 12, (2, 9))
+    run = lambda eng: _replica_polish(  # noqa: E731
+        48, 4, seed=0, n_iter=20, fold=4, start_orbits=orbits, engine=eng,
+        replicas=2, exchange_every=10, delta=True)
+    a, b = run("pallas"), run("bitset")
+    assert a.graph.edges == b.graph.edges
+    assert a.mpl == b.mpl and a.history == b.history
+    assert a.evals_delta == b.evals_delta and a.evals_full == b.evals_full
+
+
+def test_replica_polish_proposal_batch():
+    """proposal_batch=M prices M swaps per chain per dispatch and accepts
+    greedily in lockstep order: M=1 reproduces the unbatched trajectory
+    verbatim (it *is* the unbatched loop), larger M is deterministic,
+    prices M proposals per chain per iteration, and still never degrades
+    below the warm start."""
+    d1, f1 = _polish_pair(64, 4, 4, 0, 2, proposal_batch=1)
+    assert d1.graph.edges == f1.graph.edges and d1.history == f1.history
+    b1 = _polish_pair(64, 4, 4, 0, 2, proposal_batch=3)[0]
+    b2 = _polish_pair(64, 4, 4, 0, 2, proposal_batch=3)[0]
+    assert b1.graph.edges == b2.graph.edges and b1.history == b2.history
+    assert b1.evals_delta + b1.evals_full > d1.evals_delta + d1.evals_full
+    assert b1.mpl <= d1.history[0]  # warm-start MPL never degrades
+    with pytest.raises(ValueError, match="proposal_batch"):
+        _polish_pair(64, 4, 4, 0, 2, proposal_batch=0)
+
+
+def test_sharded_delta_state_disconnect_and_recovery_exact():
+    """The device delta dispatch stays exact through sentinel-coded
+    disconnection: removing a whole ring orbit disconnects the graph, and
+    adding a reconnecting orbit recovers — in both directions the totals,
+    maxima and distance rows are bit-identical to the CPU ``SymmetricAPSP``
+    delta path (full_rebuild_frac=1.0 forces its incremental branch)."""
+    pytest.importorskip("jax")
+    from repro.core.engines import pallas_sweep
+    from repro.core.graphs import circulant
+
+    n, s = 16, 4
+    ring_orbit = sorted((i, (i + 1) % n) for i in range(n))
+    ring_orbit = sorted(tuple(sorted(e)) for e in ring_orbit)
+    cases = [
+        ("disconnect", ring_orbit, []),                       # 8 + 8 islands
+        ("reconnect", ring_orbit,
+         sorted((min(i, (i + 3) % n), max(i, (i + 3) % n)) for i in range(n))),
+        ("still-disconnected", ring_orbit,
+         sorted((min(i, (i + 2) % n), max(i, (i + 2) % n)) for i in range(n))),
+    ]
+    for label, removed, added in cases:
+        for use_pallas in (False, True):
+            adj = circulant(n, (1, 8)).adjacency()
+            ev = metrics.SymmetricAPSP(adj, s, full_rebuild_frac=1.0,
+                                       use_c=False, engine="numpy")
+            tok = ev.evaluate_swap(removed, added)
+            assert ev.n_delta == 1 and ev.n_full == 0, label
+            adj_rm = adj.copy()
+            for u, v in removed:
+                adj_rm[u, v] = adj_rm[v, u] = False
+            kmax = metrics._nbr_table(adj).shape[1]
+            aff = metrics._removal_affected_nbr(ev.dist, ev.nbr, removed)
+            totals, maxima, state = pallas_sweep.sharded_delta_state(
+                ev.dist[None].astype(np.int32),
+                metrics._nbr_table(adj_rm, kmax)[None],
+                [np.nonzero(aff)[0]], [added or None], n,
+                use_pallas=use_pallas)
+            assert np.array_equal(np.asarray(state[0]), tok.dist), label
+            assert int(totals[0]) == tok.total and int(maxima[0]) == tok.diam, label
+        assert (tok.diam == n) == (label != "reconnect"), label
+
+
+def test_replica_polish_resync_drift_guard():
+    """The periodic full-sweep resync raises on any divergence between the
+    maintained incremental state and a from-scratch re-sweep (and is silent
+    when the state is exact).  AssertionError, not RuntimeError: the
+    large_search fallback must not swallow a correctness failure."""
+    from repro.core.search import _circulant_orbits, _replica_polish, _resync_check
+
+    orbits = _circulant_orbits(64, 16, (2, 9))
+    res = _replica_polish(64, 4, seed=0, n_iter=16, fold=4,
+                          start_orbits=orbits, engine="bitset", replicas=2,
+                          exchange_every=8, delta=True, resync_every=4)
+    assert res.mpl < float("inf")  # every in-walk resync was clean
+
+    class _Chain:
+        def __init__(self, dist, nbr):
+            self.dist, self.nbr = dist, nbr
+
+    from repro.core.graphs import circulant
+    adj = circulant(64, (1, 2, 9)).adjacency()
+    ev = metrics.SymmetricAPSP(adj, 16, engine="numpy", use_c=False)
+    good = _Chain(ev.dist.astype(np.int32), metrics._nbr_table(adj))
+    _resync_check([good], 16, 64, use_pallas=False)  # exact state: no raise
+    bad = _Chain(good.dist.copy(), good.nbr)
+    bad.dist[3, 17] += 1  # simulated drift
+    with pytest.raises(AssertionError, match="drift"):
+        _resync_check([good, bad], 16, 64, use_pallas=False)
+
+
+def test_pallas_interpret_env_override(monkeypatch):
+    """REPRO_PALLAS_INTERPRET wins over platform auto-detect; unset falls
+    back to interpret-on-CPU; set_interpret(None) re-resolves."""
+    pytest.importorskip("jax")
+    from repro.core.engines import pallas_sweep
+
+    try:
+        for raw, expect in (("1", True), ("true", True), ("0", False),
+                            ("false", False), ("off", False), ("on", True)):
+            monkeypatch.setenv("REPRO_PALLAS_INTERPRET", raw)
+            pallas_sweep.set_interpret(None)
+            assert pallas_sweep.get_interpret() is expect, raw
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+        pallas_sweep.set_interpret(None)
+        import jax
+        on_host = jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+        assert pallas_sweep.get_interpret() is on_host
+    finally:
+        # never leak compiled-mode state into the rest of the suite
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+        pallas_sweep.set_interpret(None)
+
+
 def test_circulant_jax_engine_matches_numpy_trajectory():
     """The jitted JAX batch pricer follows the numpy hillclimb trajectory
     exactly (same accepted offsets, same iteration count, same history)."""
