@@ -128,7 +128,7 @@ class Rows:
         if self.artifact is not None:
             canon = f"BENCH_{self.artifact}.json"
             stale = {self.bench + ".json", self.bench + "_rows.json"}
-            for fname in os.listdir(out):
+            for fname in sorted(os.listdir(out)):
                 if fname != canon and (fname in stale
                                        or fname.lower() == canon.lower()):
                     os.remove(os.path.join(out, fname))

@@ -35,14 +35,14 @@ import hashlib
 import json
 import os
 import time
-from typing import Any, Callable, Iterable, Mapping, Union
+from typing import Any, Callable, Iterable, Mapping
 
 from .core import engines, metrics, netsim
 from .core.graphs import Graph, from_edges
 from .core.search import SearchResult
 from .core.specs import (SearchSpec, TopologySpec, objective_names,
                          register_objective, register_strategy, search,
-                         search_strategies)
+                         search_strategies, strategy_engine_domain)
 from .core.topologies import (build_topology as _build_topology, paper_suite,
                               parse_topology, register_topology,
                               topology_families)
@@ -94,7 +94,7 @@ def _cache_key(spec: TopologySpec) -> str:
 
 
 def build_topology(
-    spec: Union[TopologySpec, str, Graph],
+    spec: TopologySpec | str | Graph,
     *,
     cache_dir: str | None = None,
     **kw,
@@ -267,9 +267,7 @@ def _engine_applies(spec: TopologySpec, engine: str, topo_mod) -> bool:
     if not topo_mod.get_family(spec.family).searched:
         return False
     strategy = str(spec.kwargs.get("strategy", "auto")).replace("_", "-")
-    if spec.family == "optimal" and strategy == "circulant":
-        return engine in engines.CIRCULANT_ENGINES
-    return engine in engines.ROWS_ENGINES
+    return engine in strategy_engine_domain(strategy)
 
 
 def _normalize_workload(entry) -> tuple[str, str, dict]:
@@ -361,7 +359,7 @@ def _parallel_cells(
 
 
 def run_experiment(
-    topologies: Mapping[str, Union[TopologySpec, str, Graph]] | Iterable,
+    topologies: Mapping[str, TopologySpec | str | Graph] | Iterable,
     workloads: Iterable = ("stats",),
     *,
     cache_dir: str | None = None,
@@ -518,7 +516,7 @@ def main(argv: list[str] | None = None) -> int:
         with open(args.spec) as f:
             d = json.load(f)
     except (OSError, json.JSONDecodeError) as exc:
-        raise SystemExit(f"cannot read spec {args.spec!r}: {exc}")
+        raise SystemExit(f"cannot read spec {args.spec!r}: {exc}") from exc
     if not isinstance(d, Mapping):
         raise SystemExit(
             f"spec JSON must be an object, got {type(d).__name__}")
@@ -552,7 +550,7 @@ def main(argv: list[str] | None = None) -> int:
     except (ValueError, KeyError, TypeError) as exc:
         # bad registry names / malformed workload entries: a clean non-zero
         # exit naming the offender, not a traceback over a partial table
-        raise SystemExit(f"bad experiment spec {args.spec!r}: {exc}")
+        raise SystemExit(f"bad experiment spec {args.spec!r}: {exc}") from exc
     out = {"names": exp.names, "values": exp.values, "seconds": exp.seconds,
            "provenance": exp.provenance(), "table": exp.table()}
     text = json.dumps(out, indent=2, sort_keys=True, default=_json_default)

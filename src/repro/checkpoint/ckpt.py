@@ -76,7 +76,7 @@ def list_steps(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
-    for d in os.listdir(ckpt_dir):
+    for d in sorted(os.listdir(ckpt_dir)):
         if d.startswith("step_") and os.path.exists(os.path.join(ckpt_dir, d, "MANIFEST.json")):
             out.append(int(d.split("_")[1]))
     return sorted(out)

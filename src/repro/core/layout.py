@@ -104,7 +104,7 @@ def optimize_layout(
     gamma = math.exp(math.log(t_end_frac) / n_iter)
     t = t0
     # incremental delta evaluation: swapping ranks a,b only changes rows/cols a,b
-    for it in range(n_iter):
+    for _ in range(n_iter):
         t *= gamma
         a, b = rng.integers(n), rng.integers(n)
         if a == b:

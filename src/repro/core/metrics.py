@@ -351,7 +351,7 @@ class IncrementalAPSP:
         return _nbr_table(self.adj, kmax)
 
     def _refresh_nbr_rows(self, verts) -> None:
-        for u in set(verts):
+        for u in sorted(set(verts)):
             ws = np.nonzero(self.adj[u])[0]
             if len(ws) > self.nbr.shape[1]:
                 self.nbr = self._build_nbr(kmax=int(self.adj.sum(1).max()))
@@ -1007,7 +1007,7 @@ def moore_bound_vertices(k: int, d: int) -> int:
         return 1
     total = 1
     shell = k
-    for i in range(1, d + 1):
+    for _ in range(1, d + 1):
         total += shell
         shell *= k - 1
     return total

@@ -1016,7 +1016,7 @@ class _PolishChain:
             self.adj[u, v] = self.adj[v, u] = True
         try:
             out = self.nbr.copy()
-            for u in {x for e in (*removed, *added) for x in e}:
+            for u in sorted({x for e in (*removed, *added) for x in e}):
                 ws = np.nonzero(self.adj[u])[0]
                 out[u, :] = -1
                 out[u, : len(ws)] = ws

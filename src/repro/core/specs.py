@@ -47,6 +47,7 @@ __all__ = [
     "register_strategy",
     "search_strategies",
     "resolve_strategy",
+    "strategy_engine_domain",
     "Objective",
     "register_objective",
     "objective_names",
@@ -370,6 +371,22 @@ def resolve_strategy(spec: SearchSpec) -> SearchSpec:
     if (spec.n, spec.k) in KNOWN_EDGE_LISTS:
         return spec.with_overrides(strategy="pinned")
     return spec.with_overrides(strategy="sa" if spec.n <= 64 else "large")
+
+
+def strategy_engine_domain(strategy: str) -> tuple[str, ...]:
+    """Engine-name vocabulary a search strategy prices with.
+
+    The circulant tier understands the candidate-batch pricers
+    (``engines.CIRCULANT_ENGINES``); every other tier the row engines
+    (``engines.ROWS_ENGINES``).  The registry-facing answer to "is this
+    engine override meaningful for that strategy" — callers must not
+    branch on engine/strategy name literals themselves.
+    """
+    from . import engines  # lazy: keep spec construction import-light
+
+    if strategy == "circulant":
+        return engines.CIRCULANT_ENGINES
+    return tuple(engines.ROWS_ENGINES)
 
 
 def search(spec: SearchSpec):

@@ -42,7 +42,7 @@ returns the paper's benchmark suites as name → spec dicts (subsuming the
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Union
+from typing import Callable
 
 from . import graphs
 from .graphs import Graph
@@ -146,7 +146,7 @@ def parse_topology(spec: str, **kw) -> TopologySpec:
     return TopologySpec(family=fam.name, params=params, seed=seed)
 
 
-def normalize_topology(spec: Union[TopologySpec, str], **kw) -> TopologySpec:
+def normalize_topology(spec: TopologySpec | str, **kw) -> TopologySpec:
     """Canonicalise a spec-or-string plus keyword overrides into one
     :class:`TopologySpec` (``seed=`` maps onto the seed field, the legacy
     ``method=`` onto ``strategy``).  The single normalisation point — both
@@ -164,7 +164,7 @@ def normalize_topology(spec: Union[TopologySpec, str], **kw) -> TopologySpec:
     return spec
 
 
-def build_topology(spec: Union[TopologySpec, str, Graph], **kw) -> Graph:
+def build_topology(spec: TopologySpec | str | Graph, **kw) -> Graph:
     """Build a topology from a spec object, a ``family:args`` string, or a
     ready ``Graph`` (returned unchanged) — the single build entry point."""
     if isinstance(spec, Graph):

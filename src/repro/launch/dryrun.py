@@ -201,7 +201,7 @@ def _measure(cfg, shape, mesh) -> dict:
     coll_total = extrap(res[1]["coll"].get("total", 0.0), res[2]["coll"].get("total", 0.0))
     per_kind = {}
     kinds = set(res[1]["coll"]) | set(res[2]["coll"])
-    for k in kinds - {"total", "counts"}:
+    for k in sorted(kinds - {"total", "counts"}):
         per_kind[k] = extrap(res[1]["coll"].get(k, 0.0), res[2]["coll"].get(k, 0.0))
     return {
         "hlo_flops_per_chip": flops,

@@ -1,0 +1,176 @@
+"""The checker scripts themselves: a broken doc link, a dead module path, a
+perturbed certificate, and a corrupted edges hash must each drive the
+respective checker non-zero — and the pristine inputs must stay green.
+
+Also covers the ``tools.checks`` unified runner: exit code aggregates the
+sub-checkers, ``--skip`` works, and the reprolint JSON artifact is written.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+
+import pytest
+
+from tools import check_certified, check_docs, checks
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+TABLE = REPO / "src" / "repro" / "data" / "certified.json"
+
+
+# ------------------------------------------------------------------------------
+# check_docs
+# ------------------------------------------------------------------------------
+
+def test_check_docs_real_tree_green(capsys):
+    assert check_docs.main([]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_check_docs_broken_link(tmp_path, capsys):
+    md = tmp_path / "doc.md"
+    md.write_text("# Doc\n\nsee [missing](does_not_exist.md)\n")
+    rc = check_docs.main([str(md), "--root", str(tmp_path)])
+    assert rc == 1
+    assert "broken link" in capsys.readouterr().out
+
+
+def test_check_docs_missing_anchor(tmp_path, capsys):
+    other = tmp_path / "other.md"
+    other.write_text("# Real Heading\n")
+    md = tmp_path / "doc.md"
+    md.write_text("[x](other.md#no-such-heading) and [ok](other.md#real-heading)\n")
+    rc = check_docs.main([str(md), "--root", str(tmp_path)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "missing anchor" in out
+    assert out.count("missing anchor") == 1  # the good anchor passes
+
+
+def test_check_docs_dead_module_path(tmp_path, capsys):
+    md = tmp_path / "doc.md"
+    md.write_text("entry point: `repro.core.no_such_module_xyz`\n"
+                  "and `repro.no_such_pkg.thing`\n")
+    rc = check_docs.main([str(md), "--root", str(tmp_path)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "has no attribute" in out       # dead attr on a real module
+    assert "does not import" in out        # dead module entirely
+
+
+def test_check_docs_clean_fixture_green(tmp_path):
+    other = tmp_path / "other.md"
+    other.write_text("# Target\n")
+    md = tmp_path / "doc.md"
+    md.write_text("# Doc\n\n[good](other.md#target), [self](#doc), "
+                  "external [x](https://example.com), "
+                  "real module `repro.core.certify`\n")
+    assert check_docs.main([str(md), str(other), "--root", str(tmp_path)]) == 0
+
+
+def test_github_slug_rules():
+    assert check_docs.github_slug("Hello, World!") == "hello-world"
+    assert check_docs.github_slug("`code` heading") == "code-heading"
+    assert check_docs.github_slug("A [link](x.md) title") == "a-link-title"
+
+
+# ------------------------------------------------------------------------------
+# check_certified
+# ------------------------------------------------------------------------------
+
+@pytest.fixture()
+def table_copy(tmp_path):
+    dst = tmp_path / "certified.json"
+    shutil.copy(TABLE, dst)
+    return dst
+
+
+def _load(p):
+    return json.loads(p.read_text())
+
+
+def _dump(p, data):
+    p.write_text(json.dumps(data) + "\n")
+
+
+def test_check_certified_identity_only_green(table_copy, capsys):
+    # --limit 0: identity hashes only — fast, and must pass on the real table
+    assert check_certified.main(["--table", str(table_copy), "--limit", "0"]) == 0
+    assert "verified" in capsys.readouterr().out
+
+
+def test_check_certified_corrupt_hash_fails(table_copy, capsys):
+    data = _load(table_copy)
+    data["entries"][0]["edges_hash"] = "0" * len(data["entries"][0]["edges_hash"])
+    _dump(table_copy, data)
+    rc = check_certified.main(["--table", str(table_copy), "--limit", "0"])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_check_certified_perturbed_mpl_fails(table_copy, capsys):
+    data = _load(table_copy)
+    smallest = min(data["entries"], key=lambda e: e["n"])
+    smallest["mpl"] += 0.125  # recompute through independent BFS must disagree
+    _dump(table_copy, data)
+    rc = check_certified.main(
+        ["--table", str(table_copy), "--limit", str(smallest["n"])])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_check_certified_impossible_mpl_fails(table_copy, capsys):
+    # a "better than the Cerf lower bound" record is impossible — caught even
+    # without any recompute (--limit 0 skips the deep certificate pass)
+    data = _load(table_copy)
+    data["entries"][0]["mpl"] = 0.5
+    _dump(table_copy, data)
+    rc = check_certified.main(["--table", str(table_copy), "--limit", "0"])
+    assert rc == 1
+    assert "lower bound" in capsys.readouterr().out
+
+
+def test_check_certified_empty_table_fails(tmp_path, capsys):
+    empty = tmp_path / "certified.json"
+    empty.write_text('{"entries": []}\n')
+    assert check_certified.main(["--table", str(empty), "--limit", "0"]) == 1
+    assert "no entries" in capsys.readouterr().out
+
+
+# ------------------------------------------------------------------------------
+# tools.checks unified runner
+# ------------------------------------------------------------------------------
+
+def test_checks_runner_green_with_artifact(tmp_path, capsys):
+    art = tmp_path / "reprolint.json"
+    # skip the slow certified recompute here; its checker is covered above
+    rc = checks.main(["--skip", "certified", "--json", str(art)])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "all green" in out
+    data = json.loads(art.read_text())
+    assert data["tool"] == "reprolint"
+    assert data["summary"]["new_errors"] == 0
+
+
+def test_checks_runner_propagates_failure(table_copy, capsys, monkeypatch):
+    # point the certified checker at a corrupted table: one FAIL row, exit 1
+    data = _load(table_copy)
+    data["entries"][0]["edges_hash"] = "deadbeef"
+    _dump(table_copy, data)
+    monkeypatch.setattr(
+        checks, "_run_certified",
+        lambda limit: (check_certified.main(
+            ["--table", str(table_copy), "--limit", "0"]), "corrupted fixture"))
+    rc = checks.main(["--skip", "ruff", "--skip", "docs", "--skip", "reprolint"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAILURES" in out
+
+
+def test_checks_runner_skip_all(capsys):
+    rc = checks.main(["--skip", "ruff", "--skip", "docs",
+                      "--skip", "certified", "--skip", "reprolint"])
+    assert rc == 0
+    assert "all green" in capsys.readouterr().out

@@ -1,0 +1,513 @@
+"""reprolint: every rule fires on a flagged fixture and stays quiet on a
+clean one; pragmas and the baseline suppress; the real tree has no new
+findings; the hardcoded registry-name sets match the live registries.
+
+The fixtures are tiny synthetic modules linted in-memory via
+``lint_source`` — paths are chosen to land in (or out of) each rule's scope.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+
+import pytest
+
+from tools.reprolint import cli as reprolint_cli
+from tools.reprolint import engine, rules
+from tools.reprolint.engine import lint_source
+
+CORE = "src/repro/core/fixture.py"       # trajectory + runtime scope
+KERNEL = "src/repro/kernels/fixture.py"  # jax + trajectory scope
+API = "src/repro/fixture.py"             # runtime scope, not trajectory/jax
+
+
+def lint(src: str, path: str = CORE):
+    return lint_source(textwrap.dedent(src), path)
+
+
+def codes(src: str, path: str = CORE) -> list[str]:
+    return [f.code for f in lint(src, path)]
+
+
+# ------------------------------------------------------------------------------
+# Framework
+# ------------------------------------------------------------------------------
+
+def test_registry_is_populated_and_consistent():
+    assert len(engine.RULES) >= 8
+    seen_codes = [cls.code for cls in engine.RULES.values()]
+    assert len(seen_codes) == len(set(seen_codes))
+    for name, cls in engine.RULES.items():
+        assert cls.name == name
+        assert cls.severity in engine.SEVERITIES
+        assert cls.invariant and cls.rationale and cls.fix
+
+
+def test_duplicate_registration_rejected():
+    class Dup(engine.Rule):
+        code = "RL001"
+        name = "dup-of-rl001"
+
+    with pytest.raises(ValueError, match="duplicate"):
+        engine.register_rule(Dup)
+    assert "dup-of-rl001" not in engine.RULES
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    out = lint("def broken(:\n")
+    assert [f.code for f in out] == ["RL000"]
+    assert out[0].severity == "error"
+
+
+def test_finding_key_is_line_number_independent():
+    a = lint("import numpy as np\nnp.random.seed(0)\n")[0]
+    b = lint("import numpy as np\n\n\nnp.random.seed(0)\n")[0]
+    assert a.line != b.line
+    assert a.key == b.key
+
+
+# ------------------------------------------------------------------------------
+# RL001 global-rng / RL002 unseeded-rng
+# ------------------------------------------------------------------------------
+
+def test_global_rng_flagged():
+    assert codes("import numpy as np\nnp.random.seed(0)\n") == ["RL001"]
+    assert codes("import numpy as np\nx = np.random.shuffle(v)\n") == ["RL001"]
+    assert codes("import random\nrandom.random()\n") == ["RL001"]
+    assert "RL001" in codes("from numpy.random import rand\n")
+    assert "RL001" in codes("from random import shuffle\n")
+
+
+def test_global_rng_clean():
+    assert codes("""
+        import numpy as np
+
+        def draw(seed):
+            rng = np.random.default_rng(seed)
+            return rng.integers(0, 10)
+    """) == []
+    # `random` as a method name on another object is not the stdlib module
+    assert codes("rng.random()\n") == []
+
+
+def test_global_rng_out_of_scope():
+    assert codes("import numpy as np\nnp.random.seed(0)\n",
+                 "tools/fixture.py") == []
+
+
+def test_unseeded_rng_flagged():
+    assert codes("import numpy as np\nrng = np.random.default_rng()\n") == ["RL002"]
+    assert codes("import numpy as np\nrng = np.random.default_rng(None)\n") == ["RL002"]
+    assert codes("from numpy.random import default_rng\nr = default_rng()\n") == ["RL002"]
+    assert codes("import random\nr = random.Random()\n") == ["RL002"]
+
+
+def test_unseeded_rng_clean():
+    assert codes("""
+        import numpy as np
+
+        def mk(seed):
+            a = np.random.default_rng(seed)
+            b = np.random.default_rng(seed=seed)
+            c = np.random.SeedSequence(entropy=seed)
+            return a, b, c
+    """) == []
+
+
+# ------------------------------------------------------------------------------
+# RL003 wall-clock
+# ------------------------------------------------------------------------------
+
+def test_wall_clock_flagged_in_trajectory_modules():
+    assert codes("import time\nt0 = time.perf_counter()\n") == ["RL003"]
+    assert codes("import time\nt0 = time.time()\n", KERNEL) == ["RL003"]
+    assert "RL003" in codes("from time import perf_counter\n")
+    assert codes("import datetime\nnow = datetime.datetime.now()\n") == ["RL003"]
+
+
+def test_wall_clock_allowed_outside_trajectory_modules():
+    src = "import time\nt0 = time.perf_counter()\n"
+    assert codes(src, "benchmarks/fixture.py") == []
+    assert codes(src, API) == []
+    # time.sleep is not a clock read
+    assert codes("import time\ntime.sleep(1)\n") == []
+
+
+# ------------------------------------------------------------------------------
+# RL004 registry-literal
+# ------------------------------------------------------------------------------
+
+def test_registry_literal_flagged():
+    assert codes('if engine == "pallas":\n    pass\n', API) == ["RL004"]
+    assert codes('ok = strategy != "circulant"\n', API) == ["RL004"]
+    assert codes('if name in ("c", "numpy"):\n    pass\n',
+                 API) == ["RL004", "RL004"]
+    assert codes('if obj == "collective-time":\n    pass\n', API) == ["RL004"]
+
+
+def test_registry_literal_clean():
+    # inside a registry module the same comparison is the implementation
+    assert codes('if engine == "pallas":\n    pass\n',
+                 "src/repro/core/engines/adapter.py") == []
+    assert codes('if engine == "pallas":\n    pass\n',
+                 "src/repro/core/specs.py") == []
+    # generic names (ring/torus) are deliberately not in the name sets
+    assert codes('if algorithm == "ring":\n    pass\n', API) == []
+    # non-comparison uses of the literals are fine (labels, dict keys)
+    assert codes('label = f"engine=pallas"\nd = {"pallas": 1}\n', API) == []
+
+
+def test_registry_names_match_live_registries():
+    """The hardcoded name sets can never rot relative to the registries."""
+    from repro.core import engines, specs, topologies
+
+    assert rules.ENGINE_NAMES == (set(engines.ROWS_ENGINES)
+                                  | set(engines.CIRCULANT_ENGINES))
+    assert rules.STRATEGY_NAMES == set(specs.STRATEGIES)
+    assert rules.OBJECTIVE_NAMES == set(specs.OBJECTIVES)
+    # families: a deliberate subset (generic names like ring/torus excluded)
+    assert rules.FAMILY_NAMES <= set(topologies.FAMILIES)
+
+
+# ------------------------------------------------------------------------------
+# RL005 kernel-int64
+# ------------------------------------------------------------------------------
+
+def test_kernel_int64_flagged():
+    assert codes("""
+        import jax.numpy as jnp
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...].astype(jnp.int64)
+    """, KERNEL) == ["RL005"]
+    assert codes("""
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...].astype("uint64")
+    """, KERNEL) == ["RL005"]
+    assert codes("""
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] & 0xFFFFFFFF
+    """, KERNEL) == ["RL005"]
+
+
+def test_kernel_int64_clean_and_scoped():
+    assert codes("""
+        import jax.numpy as jnp
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...].astype(jnp.uint32) & jnp.uint32(0x7FFFFFFF)
+    """, KERNEL) == []
+    # int64 in plain host code is fine — the rule only covers traced fns
+    assert codes("""
+        import numpy as np
+
+        def host_total(rows):
+            return rows.astype(np.int64).sum()
+    """, KERNEL) == []
+
+
+def test_jit_decorated_function_is_traced():
+    assert codes("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return x.astype(jnp.int64)
+    """, KERNEL) == ["RL005"]
+
+
+def test_wrapper_call_and_transitive_callee_are_traced():
+    assert codes("""
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        def helper(x):
+            return x.astype(jnp.int64)
+
+        def body(x):
+            return helper(x)
+
+        step = jax.jit(functools.partial(body))
+    """, KERNEL) == ["RL005"]
+
+
+# ------------------------------------------------------------------------------
+# RL006 traced-branch
+# ------------------------------------------------------------------------------
+
+def test_traced_branch_flagged():
+    assert codes("""
+        def _kernel(x_ref, o_ref):
+            v = x_ref[0]
+            if v > 0:
+                o_ref[0] = v
+    """, KERNEL) == ["RL006"]
+    assert codes("""
+        def _kernel(x_ref, o_ref):
+            while x_ref[0] > 0:
+                pass
+    """, KERNEL) == ["RL006"]
+    assert codes("""
+        def _kernel(x_ref, o_ref):
+            o_ref[0] = 1 if x_ref[0] > 0 else 2
+    """, KERNEL) == ["RL006"]
+
+
+def test_traced_branch_clean():
+    # .shape is static under tracing; closure flags are not parameters
+    assert codes("""
+        def make(use_fast):
+            def _kernel(x_ref, o_ref, *, nb):
+                kmax = nb.shape[1]
+                for j in range(kmax):
+                    o_ref[j] = x_ref[j]
+                if use_fast:
+                    pass
+            return _kernel
+    """, KERNEL) == []
+
+
+# ------------------------------------------------------------------------------
+# RL007 host-sync
+# ------------------------------------------------------------------------------
+
+def test_host_sync_flagged():
+    assert codes("""
+        def _kernel(x_ref, o_ref):
+            v = x_ref[0].item()
+            o_ref[0] = v
+    """, KERNEL) == ["RL007"]
+    assert codes("""
+        import numpy as np
+        import jax
+
+        @jax.jit
+        def step(x):
+            return np.asarray(x)
+    """, KERNEL) == ["RL007"]
+    # float(tracer) concretizes
+    assert "RL007" in codes("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            return float(x)
+    """, KERNEL)
+
+
+def test_host_sync_clean():
+    assert codes("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.asarray(x) + x.sum()
+    """, KERNEL) == []
+    # .item() in plain host code is fine
+    assert codes("def host(arr):\n    return arr.max().item()\n", KERNEL) == []
+
+
+# ------------------------------------------------------------------------------
+# RL008 jit-global (warning)
+# ------------------------------------------------------------------------------
+
+def test_jit_global_flagged_as_warning():
+    out = lint("""
+        import jax
+
+        CACHE = {}
+
+        @jax.jit
+        def step(x):
+            return x * CACHE["scale"]
+    """, KERNEL)
+    assert [f.code for f in out] == ["RL008"]
+    assert out[0].severity == "warning"
+
+
+def test_jit_global_clean():
+    assert codes("""
+        import jax
+
+        CACHE = {}
+
+        def lookup(k):
+            return CACHE[k]
+
+        @jax.jit
+        def step(x, scale):
+            return x * scale
+    """, KERNEL) == []
+
+
+# ------------------------------------------------------------------------------
+# RL009 unsorted-iter
+# ------------------------------------------------------------------------------
+
+def test_unsorted_iter_flagged():
+    assert codes("for x in {1, 2, 3}:\n    pass\n") == ["RL009"]
+    assert codes("import os\nfor f in os.listdir(d):\n    pass\n") == ["RL009"]
+    assert codes("out = [x for x in set(xs)]\n") == ["RL009"]
+    assert codes("for x in a_set | b_set:\n    pass\n") == []  # names: unknown type
+    assert codes("for x in set(a) | set(b):\n    pass\n") == ["RL009"]
+    assert codes("import os\nfor i, f in enumerate(os.listdir(d)):\n    pass\n") \
+        == ["RL009"]
+    assert codes("import pathlib\nfor p in pathlib.Path(d).rglob('*.py'):\n"
+                 "    pass\n") == ["RL009"]
+
+
+def test_unsorted_iter_clean():
+    assert codes("for x in sorted({1, 2, 3}):\n    pass\n") == []
+    assert codes("import os\nfor f in sorted(os.listdir(d)):\n    pass\n") == []
+    assert codes("for x in [1, 2, 3]:\n    pass\n") == []
+    # membership tests and set construction are fine — only iteration counts
+    assert codes("s = {1, 2}\nok = 3 in s\n") == []
+
+
+# ------------------------------------------------------------------------------
+# Pragmas
+# ------------------------------------------------------------------------------
+
+def test_trailing_pragma_suppresses_that_line():
+    assert codes("import numpy as np\n"
+                 "np.random.seed(0)  # reprolint: disable=global-rng\n") == []
+    # by code, case-insensitive
+    assert codes("import numpy as np\n"
+                 "np.random.seed(0)  # reprolint: disable=RL001\n") == []
+
+
+def test_standalone_pragma_suppresses_next_line():
+    assert codes("import numpy as np\n"
+                 "# reprolint: disable=global-rng\n"
+                 "np.random.seed(0)\n") == []
+
+
+def test_file_pragma_and_all_wildcard():
+    assert codes("# reprolint: disable-file=global-rng\n"
+                 "import numpy as np\n"
+                 "np.random.seed(0)\n"
+                 "np.random.seed(1)\n") == []
+    assert codes("import numpy as np\n"
+                 "np.random.seed(0)  # reprolint: disable=all\n") == []
+
+
+def test_pragma_for_other_rule_does_not_suppress():
+    assert codes("import numpy as np\n"
+                 "np.random.seed(0)  # reprolint: disable=wall-clock\n") \
+        == ["RL001"]
+
+
+# ------------------------------------------------------------------------------
+# Baseline
+# ------------------------------------------------------------------------------
+
+def test_baseline_roundtrip_and_budget(tmp_path):
+    src = "import numpy as np\nnp.random.seed(0)\n"
+    findings = lint(src)
+    bl = tmp_path / "baseline.json"
+    engine.write_baseline(findings, bl)
+    loaded = engine.load_baseline(bl)
+    assert sum(loaded.values()) == 1
+
+    # the baselined finding is reported but marked; exit logic treats it as old
+    marked = engine.apply_baseline(lint(src), loaded)
+    assert [f.baselined for f in marked] == [True]
+
+    # a second, new occurrence exceeds the budget
+    two = lint("import numpy as np\nnp.random.seed(0)\nnp.random.seed(0)\n")
+    marked = engine.apply_baseline(two, loaded)
+    assert sorted(f.baselined for f in marked) == [False, True]
+
+
+def test_missing_baseline_is_empty():
+    assert engine.load_baseline("/nonexistent/baseline.json") == {}
+
+
+# ------------------------------------------------------------------------------
+# Full-tree + CLI + acceptance criteria
+# ------------------------------------------------------------------------------
+
+def test_real_tree_has_no_new_findings():
+    result = reprolint_cli.run()
+    assert result["files_scanned"] > 50
+    assert result["new_errors"] == 0, [
+        f.render() for f in result["findings"] if not f.baselined]
+    assert result["new_warnings"] == 0
+
+
+def test_checked_in_baseline_matches_schema():
+    data = json.loads(engine.BASELINE_PATH.read_text())
+    assert data["version"] == 1
+    assert isinstance(data["entries"], dict)
+
+
+def test_injected_global_rng_fails_the_run(tmp_path):
+    """Acceptance criterion: a global-RNG call introduced into a scanned
+    tree produces a new error (CI lint would go red)."""
+    mod = tmp_path / "src" / "repro" / "core" / "evil.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("import numpy as np\n\n"
+                   "def jitter(x):\n    return x + np.random.rand()\n")
+    result = reprolint_cli.run(paths=["src/repro/core"], root=tmp_path)
+    assert result["new_errors"] == 1
+    assert result["findings"][0].code == "RL001"
+
+
+def test_injected_kernel_int64_fails_the_run(tmp_path):
+    mod = tmp_path / "src" / "repro" / "kernels" / "evil.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("import jax.numpy as jnp\n\n"
+                   "def _kernel(x_ref, o_ref):\n"
+                   "    o_ref[...] = x_ref[...].astype(jnp.int64)\n")
+    result = reprolint_cli.run(paths=["src/repro/kernels"], root=tmp_path)
+    assert result["new_errors"] == 1
+    assert result["findings"][0].code == "RL005"
+
+
+def test_cli_exit_one_on_new_error_and_json_artifact(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "core" / "evil.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import numpy as np\nnp.random.seed(0)\n")
+    art = tmp_path / "reprolint.json"
+
+    rc = reprolint_cli.main(["--root", str(tmp_path), "--no-baseline",
+                             "--json", str(art), "-q"])
+    assert rc == 1
+    data = json.loads(art.read_text())
+    assert data["tool"] == "reprolint"
+    assert data["summary"]["new_errors"] == 1
+    assert data["findings"][0]["code"] == "RL001"
+    assert any(r["code"] == "RL001" for r in data["rules"])
+
+
+def test_cli_write_baseline_then_green(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "core" / "evil.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import numpy as np\nnp.random.seed(0)\n")
+    bl = tmp_path / "baseline.json"
+
+    assert reprolint_cli.main(["--root", str(tmp_path), "--baseline", str(bl),
+                               "--write-baseline"]) == 0
+    # same finding again: baselined, run goes green
+    assert reprolint_cli.main(["--root", str(tmp_path), "--baseline", str(bl),
+                               "-q"]) == 0
+    # a second new occurrence goes red
+    bad.write_text("import numpy as np\nnp.random.seed(0)\n"
+                   "np.random.shuffle(x)\n")
+    assert reprolint_cli.main(["--root", str(tmp_path), "--baseline", str(bl),
+                               "-q"]) == 1
+
+
+def test_cli_list_rules(capsys):
+    assert reprolint_cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for cls in engine.RULES.values():
+        assert cls.code in out
+
+
+def test_cli_clean_tree_exits_zero(capsys):
+    assert reprolint_cli.main(["-q"]) == 0
+    assert "0 new error(s)" in capsys.readouterr().out

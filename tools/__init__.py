@@ -1,0 +1,6 @@
+"""Repo tooling: checker scripts and the reprolint static analyzer.
+
+``python -m tools.checks`` runs every repo checker (docs links, certified
+graph table, reprolint) with one summary table and one exit code;
+``python -m tools.reprolint`` runs the AST invariant analyzer alone.
+"""

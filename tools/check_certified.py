@@ -65,7 +65,8 @@ def check(path: str, limit: int, full: bool) -> int:
 
 
 def regen(path: str, limit: int, full: bool) -> int:
-    table = json.load(open(path))
+    with open(path) as f:
+        table = json.load(f)
     for e in table["entries"]:
         if not (full or e["n"] <= limit):
             continue

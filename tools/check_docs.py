@@ -20,13 +20,17 @@ Exit code 0 when everything resolves; prints each failure otherwise.
 """
 from __future__ import annotations
 
+import argparse
 import importlib
 import pathlib
 import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+
+
+def default_doc_files() -> list[pathlib.Path]:
+    return sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 MODPATH_RE = re.compile(r"`((?:repro|benchmarks)(?:\.\w+)+)`")
@@ -46,7 +50,8 @@ def anchors_of(path: pathlib.Path) -> set[str]:
     return {github_slug(h) for h in HEADING_RE.findall(path.read_text())}
 
 
-def check_links(path: pathlib.Path, errors: list[str]) -> None:
+def check_links(path: pathlib.Path, errors: list[str],
+                root: pathlib.Path = ROOT) -> None:
     text = path.read_text()
     for target in LINK_RE.findall(text):
         if "://" in target or target.startswith("mailto:"):
@@ -55,15 +60,22 @@ def check_links(path: pathlib.Path, errors: list[str]) -> None:
         base = path if not dest else (path.parent / dest).resolve()
         if dest:
             try:
-                base.relative_to(ROOT)
+                base.relative_to(root)
             except ValueError:
                 continue  # GitHub-web-relative (../../actions/...): not a file
             if not base.exists():
-                errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+                errors.append(f"{_rel(path)}: broken link -> {target}")
                 continue
         if anchor and base.suffix == ".md":
             if anchor not in anchors_of(base):
-                errors.append(f"{path.relative_to(ROOT)}: missing anchor -> {target}")
+                errors.append(f"{_rel(path)}: missing anchor -> {target}")
+
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.relative_to(ROOT))
+    except ValueError:  # fixture files outside the repo root (tests)
+        return str(path)
 
 
 def check_module_paths(path: pathlib.Path, errors: list[str]) -> None:
@@ -77,27 +89,40 @@ def check_module_paths(path: pathlib.Path, errors: list[str]) -> None:
         try:
             mod = importlib.import_module(mod_name)
         except ImportError as e:
-            errors.append(f"{path.relative_to(ROOT)}: module does not import -> "
+            errors.append(f"{_rel(path)}: module does not import -> "
                           f"`{dotted}` ({e})")
             continue
         if not hasattr(mod, attr):
-            errors.append(f"{path.relative_to(ROOT)}: `{mod_name}` has no "
+            errors.append(f"{_rel(path)}: `{mod_name}` has no "
                           f"attribute `{attr}`")
 
 
-def main() -> int:
+def run(doc_files: list[pathlib.Path], root: pathlib.Path = ROOT) -> list[str]:
+    """Check the given markdown files; returns the list of problems."""
     sys.path.insert(0, str(ROOT))          # benchmarks.*
     sys.path.insert(0, str(ROOT / "src"))  # repro.*
     errors: list[str] = []
-    for path in DOC_FILES:
-        check_links(path, errors)
+    for path in doc_files:
+        check_links(path, errors, root=root)
         check_module_paths(path, errors)
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("files", nargs="*", type=pathlib.Path,
+                   help="markdown files to check (default: docs/*.md + README.md)")
+    p.add_argument("--root", type=pathlib.Path, default=ROOT,
+                   help="repo root that relative links must stay inside")
+    args = p.parse_args(argv)
+    doc_files = [f.resolve() for f in args.files] or default_doc_files()
+    errors = run(doc_files, root=args.root.resolve())
     if errors:
         print(f"check_docs: {len(errors)} problem(s)")
         for e in errors:
             print("  " + e)
         return 1
-    print(f"check_docs: {len(DOC_FILES)} files OK "
+    print(f"check_docs: {len(doc_files)} files OK "
           f"(links, anchors, module paths all resolve)")
     return 0
 

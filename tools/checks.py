@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""Unified checker entry point: ``python -m tools.checks``.
+
+Runs every repo checker with one summary table and one exit code — the CI
+``lint`` job's single gate, and the one command to run before pushing:
+
+- **ruff** — the configured lint families (skipped with a warning when ruff
+  is not installed, e.g. in the minimal runtime container);
+- **docs** — ``tools/check_docs.py`` link/anchor/module-path checker;
+- **certified** — ``tools/check_certified.py --limit 512`` (identity hashes
+  for every entry, full recompute for small N; the deeper ``--limit 4096``
+  run stays in the dedicated ``certified-gate`` CI job);
+- **reprolint** — the AST invariant analyzer over the default tree.
+
+``--json FILE`` writes reprolint's machine-readable findings (the CI
+artifact); ``--bench`` appends the analyzer's own cost row (files scanned,
+findings, wall time) to ``results/benchmarks/BENCH_lint.json`` via
+``benchmarks.common.Rows`` so lint cost is tracked in the bench trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)                    # tools.*, benchmarks.*
+sys.path.insert(0, os.path.join(ROOT, "src"))  # repro.*
+
+RUFF_TARGETS = ("src", "tests", "benchmarks", "tools")
+
+
+def _run_ruff() -> tuple[int | None, str]:
+    ruff = shutil.which("ruff")
+    if ruff is None:
+        return None, "skipped (ruff not installed)"
+    proc = subprocess.run([ruff, "check", *RUFF_TARGETS], cwd=ROOT)
+    return proc.returncode, f"ruff check {' '.join(RUFF_TARGETS)}"
+
+
+def _run_docs() -> tuple[int, str]:
+    from tools import check_docs
+
+    return check_docs.main([]), "links, anchors, module paths"
+
+
+def _run_certified(limit: int) -> tuple[int, str]:
+    from tools import check_certified
+
+    return (check_certified.main(["--limit", str(limit)]),
+            f"identity + recompute (n <= {limit})")
+
+
+def _run_reprolint(json_path: str | None, bench: bool) -> tuple[int, str]:
+    from tools import reprolint
+    from tools.reprolint import cli as reprolint_cli
+
+    result = reprolint_cli.run()
+    for f in result["findings"]:
+        print(f.render())
+    if json_path:
+        import json as _json
+        import pathlib
+
+        pathlib.Path(json_path).write_text(
+            _json.dumps(reprolint_cli.to_json(result), indent=1) + "\n")
+    if bench:
+        from benchmarks.common import Rows
+
+        rows = Rows("lint", artifact="lint")
+        rows.add("reprolint", result["wall_s"],
+                 f"files={result['files_scanned']} findings={result['total']}")
+        rows.results.append({
+            "name": "reprolint",
+            "files_scanned": result["files_scanned"],
+            "findings": result["total"],
+            "baselined": result["baselined"],
+            "new_errors": result["new_errors"],
+            "new_warnings": result["new_warnings"],
+            "rules": len(reprolint.RULES),
+            "wall_s": round(result["wall_s"], 4),
+        })
+        rows.emit()
+        rows.save()
+    detail = (f"{result['files_scanned']} files, {result['total']} finding(s), "
+              f"{result['new_errors']} new error(s)")
+    return (1 if result["new_errors"] else 0), detail
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="tools.checks",
+        description="Run every repo checker with one summary and exit code.")
+    p.add_argument("--limit", type=int, default=512,
+                   help="certified-table full-recompute ceiling (default 512)")
+    p.add_argument("--json", metavar="FILE",
+                   help="write reprolint findings JSON (CI artifact)")
+    p.add_argument("--bench", action="store_true",
+                   help="append the lint-cost row to BENCH_lint.json")
+    p.add_argument("--skip", action="append", default=[],
+                   choices=["ruff", "docs", "certified", "reprolint"],
+                   help="skip a checker (repeatable)")
+    args = p.parse_args(argv)
+
+    checkers = [
+        ("ruff", _run_ruff),
+        ("docs", _run_docs),
+        ("certified", lambda: _run_certified(args.limit)),
+        ("reprolint", lambda: _run_reprolint(args.json, args.bench)),
+    ]
+    rows: list[tuple[str, str, float, str]] = []
+    exit_code = 0
+    for name, fn in checkers:
+        if name in args.skip:
+            rows.append((name, "SKIP", 0.0, "skipped by --skip"))
+            continue
+        print(f"== {name} " + "=" * max(0, 66 - len(name)))
+        t0 = time.perf_counter()
+        try:
+            code, detail = fn()
+        except Exception as e:  # a crashed checker is a failed checker
+            code, detail = 1, f"crashed: {type(e).__name__}: {e}"
+        dt = time.perf_counter() - t0
+        if code is None:
+            rows.append((name, "SKIP", dt, detail))
+        else:
+            rows.append((name, "ok" if code == 0 else "FAIL", dt, detail))
+            exit_code = exit_code or (1 if code else 0)
+
+    width = max(len(n) for n, *_ in rows)
+    print("\n" + "-" * 72)
+    for name, status, dt, detail in rows:
+        print(f"{name:<{width}}  {status:<4}  {dt:7.2f}s  {detail}")
+    print("-" * 72)
+    print("checks: " + ("all green" if exit_code == 0 else "FAILURES above"))
+    return exit_code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

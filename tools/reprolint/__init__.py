@@ -1,0 +1,34 @@
+"""reprolint — AST invariant analyzer for the repro codebase.
+
+Statically rejects trajectory-breaking patterns before the runtime property
+tests run: global-state RNG, wall-clock reads in trajectory modules,
+registry-name string dispatch outside the registries, Pallas kernel
+contract violations (int64 in traced code, Python branches on tracers,
+host syncs, mutable-global capture) and hash-order iteration.
+
+Usage::
+
+    python -m tools.reprolint                  # full default tree
+    python -m tools.reprolint src/repro/core   # subset
+    python -m tools.reprolint --list-rules     # rule table
+    python -m tools.reprolint --json out.json  # machine output (CI artifact)
+
+See docs/ARCHITECTURE.md "Invariants" for the rule table and
+``# reprolint: disable=<rule>`` pragma semantics.
+"""
+from .engine import (  # noqa: F401
+    BASELINE_PATH,
+    DEFAULT_PATHS,
+    REPO_ROOT,
+    RULES,
+    Finding,
+    Rule,
+    apply_baseline,
+    lint_source,
+    load_baseline,
+    register_rule,
+    run_paths,
+    write_baseline,
+)
+from . import rules  # noqa: F401  (importing registers the built-in rules)
+from .cli import main, run  # noqa: F401

@@ -1,0 +1,119 @@
+"""reprolint command line: ``python -m tools.reprolint [paths...]``.
+
+Human output by default; ``--json FILE`` additionally writes the machine
+artifact CI uploads.  Exit status is non-zero exactly when there are *new*
+findings of severity ``error`` (``--strict`` promotes warnings) — baselined
+findings are reported but never fail the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from . import engine
+from . import rules as _rules  # noqa: F401  (import registers the rules)
+
+
+def _list_rules() -> str:
+    out = ["reprolint rules:"]
+    for cls in engine.RULES.values():
+        out.append(f"  {cls.code}[{cls.name}] ({cls.severity})")
+        out.append(f"      invariant: {cls.invariant}")
+        out.append(f"      rationale: {cls.rationale}")
+        out.append(f"      fix:       {cls.fix}")
+        out.append(f"      scope:     {', '.join(cls.scope)}"
+                   + (f"  (except {', '.join(cls.exclude)})" if cls.exclude else ""))
+    return "\n".join(out)
+
+
+def run(paths=None, baseline_path=engine.BASELINE_PATH, use_baseline=True,
+        root=engine.REPO_ROOT):
+    """Programmatic entry point (used by tools.checks and the tests).
+
+    Returns a result dict: findings, counts, files scanned, wall seconds.
+    """
+    t0 = time.perf_counter()
+    findings, n_files = engine.run_paths(paths, root=root)
+    if use_baseline:
+        findings = engine.apply_baseline(findings, engine.load_baseline(baseline_path))
+    wall_s = time.perf_counter() - t0
+    new = [f for f in findings if not f.baselined]
+    return {
+        "findings": findings,
+        "files_scanned": n_files,
+        "wall_s": wall_s,
+        "total": len(findings),
+        "baselined": len(findings) - len(new),
+        "new_errors": sum(f.severity == "error" for f in new),
+        "new_warnings": sum(f.severity == "warning" for f in new),
+    }
+
+
+def to_json(result: dict) -> dict:
+    return {
+        "tool": "reprolint",
+        "version": 1,
+        "files_scanned": result["files_scanned"],
+        "wall_s": round(result["wall_s"], 4),
+        "summary": {k: result[k] for k in
+                    ("total", "baselined", "new_errors", "new_warnings")},
+        "rules": [{"code": c.code, "name": c.name, "severity": c.severity,
+                   "invariant": c.invariant} for c in engine.RULES.values()],
+        "findings": [f.to_json() for f in result["findings"]],
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST invariant analyzer: determinism, registry purity, "
+                    "Pallas kernel contracts, iteration-order safety.")
+    p.add_argument("paths", nargs="*",
+                   help=f"files/dirs to scan (default: {' '.join(engine.DEFAULT_PATHS)})")
+    p.add_argument("--json", metavar="FILE", help="also write JSON findings")
+    p.add_argument("--root", default=str(engine.REPO_ROOT),
+                   help="tree root that relative paths/scopes resolve against")
+    p.add_argument("--baseline", default=str(engine.BASELINE_PATH),
+                   help="baseline file (default: the checked-in one)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline: every finding is new")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="rewrite the baseline from the current findings and exit 0")
+    p.add_argument("--strict", action="store_true",
+                   help="new warnings also fail the run")
+    p.add_argument("--list-rules", action="store_true")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="only print the summary line")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    result = run(paths=args.paths or None,
+                 baseline_path=args.baseline,
+                 use_baseline=not args.no_baseline,
+                 root=pathlib.Path(args.root).resolve())
+    findings = result["findings"]
+
+    if args.write_baseline:
+        engine.write_baseline(findings, args.baseline)
+        print(f"reprolint: baseline written to {args.baseline} "
+              f"({len(findings)} finding(s))")
+        return 0
+
+    if not args.quiet:
+        for f in findings:
+            print(f.render())
+    if args.json:
+        pathlib.Path(args.json).write_text(
+            json.dumps(to_json(result), indent=1) + "\n")
+
+    fail = result["new_errors"] + (result["new_warnings"] if args.strict else 0)
+    print(f"reprolint: scanned {result['files_scanned']} files in "
+          f"{result['wall_s']:.2f}s — {result['total']} finding(s) "
+          f"({result['baselined']} baselined, {result['new_errors']} new "
+          f"error(s), {result['new_warnings']} new warning(s))")
+    return 1 if fail else 0

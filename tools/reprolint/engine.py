@@ -1,0 +1,247 @@
+"""reprolint core: rule framework, pragmas, baseline, file runner.
+
+The analyzer enforces the repo's reproducibility invariants *statically* —
+before the runtime property tests ever run.  A rule is an
+:class:`ast.NodeVisitor` subclass registered via :func:`register_rule`; each
+carries a stable code (``RL001``), a human name (``global-rng``), a severity,
+and the invariant it encodes (surfaced by ``--list-rules`` and the docs
+table).
+
+Suppression layers, outermost first:
+
+1. **Pragmas** — ``# reprolint: disable=<rule>[,<rule>...]`` trailing a line
+   suppresses that line; on a line of its own it suppresses the next
+   statement line; ``# reprolint: disable-file=<rule>`` anywhere suppresses
+   the whole file.  ``<rule>`` is a rule name, a rule code, or ``all``.
+2. **Baseline** — a checked-in JSON map of finding keys (path + rule +
+   source snippet, line-number independent) to allowed counts.  Baselined
+   findings are reported but do not fail the run; anything *new* does.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from collections import Counter
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+BASELINE_PATH = pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+#: default scan set for a full-tree run (tests/ is deliberately out: test
+#: code exercises the banned patterns on purpose as fixtures)
+DEFAULT_PATHS = ("src/repro", "benchmarks", "examples", "tools")
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    code: str       # stable rule code, e.g. "RL001"
+    rule: str       # rule name, e.g. "global-rng"
+    severity: str   # "error" | "warning"
+    path: str       # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    snippet: str = ""       # stripped source line (baseline identity)
+    baselined: bool = False
+
+    @property
+    def key(self) -> str:
+        """Line-number-independent identity used by the baseline file."""
+        return f"{self.path}::{self.code}::{self.snippet}"
+
+    def to_json(self) -> dict:
+        return {
+            "code": self.code, "rule": self.rule, "severity": self.severity,
+            "path": self.path, "line": self.line, "col": self.col,
+            "message": self.message, "snippet": self.snippet,
+            "baselined": self.baselined,
+        }
+
+    def render(self) -> str:
+        base = (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.code}[{self.rule}] {self.severity}: {self.message}")
+        return base + ("  [baselined]" if self.baselined else "")
+
+
+class FileContext:
+    """Per-file state shared by every rule: source, lines, pragmas."""
+
+    _PRAGMA_RE = re.compile(r"#\s*reprolint:\s*(disable|disable-file)\s*=\s*"
+                            r"([A-Za-z0-9_,\- ]+)")
+
+    def __init__(self, rel_path: str, source: str):
+        self.rel_path = rel_path
+        self.source = source
+        self.lines = source.splitlines()
+        self.line_disables: dict[int, set[str]] = {}
+        self.file_disables: set[str] = set()
+        for i, text in enumerate(self.lines, start=1):
+            m = self._PRAGMA_RE.search(text)
+            if not m:
+                continue
+            kind = m.group(1)
+            names = {t.strip().lower() for t in m.group(2).split(",") if t.strip()}
+            if kind == "disable-file":
+                self.file_disables |= names
+            elif text[: m.start()].strip():
+                # trailing pragma: suppress this line
+                self.line_disables.setdefault(i, set()).update(names)
+            else:
+                # standalone pragma line: suppress the next line
+                self.line_disables.setdefault(i + 1, set()).update(names)
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def suppressed(self, finding: Finding) -> bool:
+        names = self.file_disables | self.line_disables.get(finding.line, set())
+        return bool(names & {"all", finding.rule, finding.code.lower()})
+
+
+class Rule(ast.NodeVisitor):
+    """Base class for reprolint rules.
+
+    Subclasses set the class attributes, implement ``visit_*`` methods (or
+    override :meth:`check` for whole-tree analyses) and call :meth:`report`
+    for each violation.  ``scope`` is a tuple of repo-relative path prefixes
+    the rule applies to; ``exclude`` removes exact paths from it.
+    """
+
+    code = "RL000"
+    name = "base"
+    severity = "error"
+    invariant = ""   # one-line statement of the invariant the rule encodes
+    rationale = ""   # why breaking it breaks reproducibility
+    fix = ""         # how to comply (shown in --list-rules / docs table)
+    scope: tuple[str, ...] = ("",)
+    exclude: tuple[str, ...] = ()
+
+    def __init__(self, ctx: FileContext):
+        self.ctx = ctx
+        self.findings: list[Finding] = []
+
+    @classmethod
+    def applies(cls, rel_path: str) -> bool:
+        # exclude entries ending in "/" are prefixes, others exact paths
+        for e in cls.exclude:
+            if rel_path == e or (e.endswith("/") and rel_path.startswith(e)):
+                return False
+        return any(rel_path.startswith(p) for p in cls.scope)
+
+    def check(self, tree: ast.AST) -> None:
+        self.visit(tree)
+
+    def report(self, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        self.findings.append(Finding(
+            code=self.code, rule=self.name, severity=self.severity,
+            path=self.ctx.rel_path, line=line,
+            col=getattr(node, "col_offset", 0) + 1, message=message,
+            snippet=self.ctx.snippet(line)))
+
+
+#: rule registry: name -> rule class, in registration (= code) order
+RULES: dict[str, type[Rule]] = {}
+
+
+def register_rule(cls: type[Rule]) -> type[Rule]:
+    if cls.name in RULES or any(r.code == cls.code for r in RULES.values()):
+        raise ValueError(f"duplicate rule registration: {cls.code}[{cls.name}]")
+    if cls.severity not in SEVERITIES:
+        raise ValueError(f"{cls.code}: bad severity {cls.severity!r}")
+    RULES[cls.name] = cls
+    return cls
+
+
+def lint_source(source: str, rel_path: str,
+                rules: list[type[Rule]] | None = None) -> list[Finding]:
+    """Lint one file's source text; returns pragma-filtered findings."""
+    ctx = FileContext(rel_path, source)
+    try:
+        tree = ast.parse(source, filename=rel_path)
+    except SyntaxError as e:
+        return [Finding(code="RL000", rule="parse-error", severity="error",
+                        path=rel_path, line=e.lineno or 1,
+                        col=(e.offset or 0) + 1,
+                        message=f"file does not parse: {e.msg}",
+                        snippet=ctx.snippet(e.lineno or 1))]
+    findings: list[Finding] = []
+    for cls in (rules if rules is not None else RULES.values()):
+        if not cls.applies(rel_path):
+            continue
+        rule = cls(ctx)
+        rule.check(tree)
+        findings.extend(f for f in rule.findings if not ctx.suppressed(f))
+    findings.sort(key=lambda f: (f.line, f.col, f.code))
+    return findings
+
+
+def iter_py_files(paths: list[str] | tuple[str, ...],
+                  root: pathlib.Path = REPO_ROOT) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for p in paths:
+        path = (root / p) if not pathlib.Path(p).is_absolute() else pathlib.Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    return [p for p in out if "__pycache__" not in p.parts]
+
+
+def run_paths(paths: list[str] | tuple[str, ...] | None = None,
+              root: pathlib.Path = REPO_ROOT,
+              rules: list[type[Rule]] | None = None,
+              ) -> tuple[list[Finding], int]:
+    """Lint every ``*.py`` under ``paths``; returns (findings, files scanned)."""
+    files = iter_py_files(paths or DEFAULT_PATHS, root)
+    findings: list[Finding] = []
+    for f in files:
+        rel = f.relative_to(root).as_posix() if f.is_relative_to(root) else str(f)
+        findings.extend(lint_source(f.read_text(), rel, rules=rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings, len(files)
+
+
+# ------------------------------------------------------------------------------
+# Baseline
+# ------------------------------------------------------------------------------
+
+def load_baseline(path: pathlib.Path | str = BASELINE_PATH) -> Counter:
+    """Baseline file -> Counter of allowed finding keys (missing file = empty)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return Counter()
+    data = json.loads(p.read_text())
+    return Counter({str(k): int(v) for k, v in data.get("entries", {}).items()})
+
+
+def apply_baseline(findings: list[Finding], baseline: Counter) -> list[Finding]:
+    """Mark findings covered by the baseline; returns the new list (findings
+    are frozen, so marked ones are replaced)."""
+    budget = Counter(baseline)
+    out = []
+    for f in findings:
+        if budget[f.key] > 0:
+            budget[f.key] -= 1
+            f = dataclasses.replace(f, baselined=True)
+        out.append(f)
+    return out
+
+
+def baseline_payload(findings: list[Finding]) -> dict:
+    entries = Counter(f.key for f in findings)
+    return {"version": 1, "entries": dict(sorted(entries.items()))}
+
+
+def write_baseline(findings: list[Finding],
+                   path: pathlib.Path | str = BASELINE_PATH) -> None:
+    pathlib.Path(path).write_text(
+        json.dumps(baseline_payload(findings), indent=1) + "\n")

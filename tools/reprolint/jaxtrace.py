@@ -1,0 +1,209 @@
+"""Static identification of jax-traced functions and traced-value taint.
+
+The Pallas-contract rules (``kernel-int64``, ``traced-branch``,
+``host-sync``, ``jit-global``) only make sense *inside* code that jax
+traces.  This module finds those functions without importing anything:
+
+- **kernel bodies**: any ``def`` with a parameter ending in ``_ref`` (the
+  Pallas ``pl.pallas_call`` kernel convention used across ``kernels/``);
+- **wrapped functions**: a ``def`` or ``lambda`` whose name is passed as an
+  argument to ``jit`` / ``pallas_call`` / ``shard_map`` / ``vmap`` /
+  ``lax.while_loop`` / ... (through ``functools.partial`` aliases), or that
+  carries such a decorator;
+- **transitive callees**: module-level functions called from an already
+  traced function (e.g. ``sweep_rows_ref`` called from the Pallas kernel
+  body) — propagated to a fixpoint.
+
+Taint: inside a traced function, positional parameters are traced values;
+keyword-only parameters are static by the repo's kernel convention
+(``functools.partial(_kernel, sentinel=...)``).  Assignments propagate
+taint; ``.shape`` / ``.dtype`` / ``.ndim`` / ``len()`` sanitize it (static
+under tracing).  This is a lint heuristic, not a type system — pragmas and
+the baseline absorb the residue.
+"""
+from __future__ import annotations
+
+import ast
+
+#: callables whose function-valued arguments get traced by jax
+TRACE_WRAPPERS = frozenset({
+    "jit", "pallas_call", "shard_map", "vmap", "pmap", "xmap",
+    "checkpoint", "remat", "custom_vjp", "custom_jvp",
+    "while_loop", "fori_loop", "cond", "scan", "switch", "associated_scan",
+    "grad", "value_and_grad",
+})
+
+#: attribute accesses on traced values that yield *static* results
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "itemsize"})
+
+FunctionNode = ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+
+
+def _callee_name(func: ast.expr) -> str | None:
+    """Last path component of a call target: ``jax.lax.while_loop`` ->
+    ``while_loop``; plain names pass through."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_kernel(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    args = fn.args
+    every = args.posonlyargs + args.args + args.kwonlyargs
+    return any(a.arg.endswith("_ref") for a in every)
+
+
+def _has_trace_decorator(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        for node in ast.walk(dec):
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                if _callee_name(node) in TRACE_WRAPPERS:
+                    return True
+    return False
+
+
+def traced_functions(tree: ast.AST) -> dict[FunctionNode, str]:
+    """All function/lambda nodes jax traces, mapped to a kind:
+    ``"kernel"`` (Pallas kernel body) or ``"traced"`` (jit/vmap/...)."""
+    defs_by_name: dict[str, list[ast.FunctionDef | ast.AsyncFunctionDef]] = {}
+    aliases: dict[str, str] = {}   # partial alias -> underlying function name
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, []).append(node)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            if (_callee_name(call.func) == "partial" and call.args
+                    and isinstance(call.args[0], ast.Name)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                aliases[node.targets[0].id] = call.args[0].id
+
+    traced: dict[FunctionNode, str] = {}
+
+    def mark(fn: FunctionNode, kind: str) -> None:
+        traced.setdefault(fn, kind)
+
+    for fns in defs_by_name.values():
+        for fn in fns:
+            if _is_kernel(fn):
+                mark(fn, "kernel")
+            elif _has_trace_decorator(fn):
+                mark(fn, "traced")
+
+    def mark_name(name: str, kind: str = "traced") -> None:
+        name = aliases.get(name, name)
+        for fn in defs_by_name.get(name, ()):
+            mark(fn, kind)
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _callee_name(node.func) in TRACE_WRAPPERS):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                mark(arg, "traced")
+            elif isinstance(arg, ast.Name):
+                mark_name(arg.id)
+            elif isinstance(arg, ast.Call) and _callee_name(arg.func) == "partial":
+                if arg.args and isinstance(arg.args[0], ast.Name):
+                    mark_name(arg.args[0].id)
+
+    # transitive: module functions *called* from traced code run under the
+    # same trace (the kernel body calling its jnp oracle, helpers, ...)
+    changed = True
+    while changed:
+        changed = False
+        for fn in list(traced):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                    name = aliases.get(node.func.id, node.func.id)
+                    for callee in defs_by_name.get(name, ()):
+                        if callee not in traced:
+                            mark(callee, "traced")
+                            changed = True
+    return traced
+
+
+def tainted_names(fn: FunctionNode) -> set[str]:
+    """Names holding traced values inside ``fn`` (heuristic dataflow)."""
+    args = fn.args
+    tainted = {a.arg for a in args.posonlyargs + args.args}
+    if args.vararg:
+        tainted.add(args.vararg.arg)
+    # keyword-only params are static by convention (partial-bound kernel
+    # params like `sentinel`); defaults don't matter here
+    if isinstance(fn, ast.Lambda):
+        return tainted
+
+    def expr_tainted(expr: ast.expr) -> bool:
+        if isinstance(expr, ast.Attribute) and expr.attr in STATIC_ATTRS:
+            return False
+        if isinstance(expr, ast.Call):
+            cname = _callee_name(expr.func)
+            if cname in ("len", "range", "isinstance", "type"):
+                return False
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        return any(expr_tainted(c) for c in ast.iter_child_nodes(expr)
+                   if isinstance(c, ast.expr))
+
+    def target_names(t: ast.expr) -> list[str]:
+        if isinstance(t, ast.Name):
+            return [t.id]
+        if isinstance(t, (ast.Tuple, ast.List)):
+            return [n for e in t.elts for n in target_names(e)]
+        if isinstance(t, ast.Starred):
+            return target_names(t.value)
+        return []
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    changed = True
+    while changed:
+        changed = False
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)) and node is not fn:
+                    continue  # nested scopes analyzed on their own
+                value = None
+                targets: list[str] = []
+                if isinstance(node, ast.Assign):
+                    value = node.value
+                    targets = [n for t in node.targets for n in target_names(t)]
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    value = node.value
+                    targets = target_names(node.target)
+                elif isinstance(node, ast.For):
+                    value = node.iter
+                    targets = target_names(node.target)
+                elif isinstance(node, ast.NamedExpr):
+                    value = node.value
+                    targets = target_names(node.target)
+                if value is None or not targets:
+                    continue
+                if expr_tainted(value):
+                    new = set(targets) - tainted
+                    if new:
+                        tainted |= new
+                        changed = True
+    return tainted
+
+
+def expr_references(expr: ast.expr, names: set[str],
+                    sanitize: bool = True) -> bool:
+    """Whether ``expr`` references any of ``names`` as a traced value
+    (``.shape``/``len()``-style accesses are static and don't count when
+    ``sanitize``)."""
+    if sanitize:
+        if isinstance(expr, ast.Attribute) and expr.attr in STATIC_ATTRS:
+            return False
+        if isinstance(expr, ast.Call) and _callee_name(expr.func) in (
+                "len", "range", "isinstance", "type"):
+            return False
+    if isinstance(expr, ast.Name):
+        return expr.id in names
+    return any(expr_references(c, names, sanitize)
+               for c in ast.iter_child_nodes(expr)
+               if isinstance(c, ast.expr))

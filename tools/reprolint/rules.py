@@ -1,0 +1,481 @@
+"""The codebase-specific reprolint rules.
+
+Every rule encodes one invariant the repo's bit-identical-trajectory
+guarantee rests on (see docs/ARCHITECTURE.md "Invariants").  Scopes are
+repo-relative path prefixes:
+
+- *trajectory modules* (``src/repro/core/``, ``src/repro/kernels/``,
+  ``src/repro/comm/``) — code whose outputs feed search trajectories,
+  certified metrics, or synthesized schedules;
+- *jax modules* (``src/repro/kernels/``, ``src/repro/core/engines/``,
+  ``src/repro/comm/``) — code containing traced/jitted functions and Pallas
+  kernel bodies;
+- *registry modules* — the only places engine/strategy/objective/family
+  name literals may branch behavior.
+"""
+from __future__ import annotations
+
+import ast
+
+from . import jaxtrace
+from .engine import Rule, register_rule
+
+RUNTIME_SCOPE = ("src/repro/", "benchmarks/", "examples/")
+TRAJECTORY_SCOPE = ("src/repro/core/", "src/repro/kernels/", "src/repro/comm/")
+JAX_SCOPE = ("src/repro/kernels/", "src/repro/core/engines/", "src/repro/comm/")
+REGISTRY_MODULES = (
+    "src/repro/core/engines/",  # the registry plus its adapters (name owners)
+    "src/repro/core/specs.py",
+    "src/repro/core/topologies.py",
+)
+
+# Registered names whose string literals may only branch behavior inside the
+# registry modules.  tests/test_reprolint.py cross-checks these against the
+# live registries so the lists can never rot.
+ENGINE_NAMES = frozenset({"c", "numpy", "bitset", "pallas", "jax"})
+STRATEGY_NAMES = frozenset({"pinned", "exhaustive", "sa", "circulant",
+                            "symmetric-sa", "large"})
+OBJECTIVE_NAMES = frozenset({"mpl", "collective-time"})
+# topology families, minus names too generic to compare against reliably
+# (ring/torus/... collide with schedule algorithms and everyday strings)
+FAMILY_NAMES = frozenset({"optimal", "suboptimal", "dragonfly",
+                          "random-regular", "random-hamiltonian-regular",
+                          "cluster-hub", "nested"})
+REGISTRY_NAMES = ENGINE_NAMES | STRATEGY_NAMES | OBJECTIVE_NAMES | FAMILY_NAMES
+
+
+def dotted(expr: ast.expr) -> str | None:
+    """``np.random.default_rng`` -> that string; None for non-name chains."""
+    parts: list[str] = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if not isinstance(expr, ast.Name):
+        return None
+    parts.append(expr.id)
+    return ".".join(reversed(parts))
+
+
+# ------------------------------------------------------------------------------
+# Determinism
+# ------------------------------------------------------------------------------
+
+#: np.random module-level entry points that are *fine*: explicit-seed
+#: generator construction (stateless until seeded by the caller)
+_NP_RANDOM_OK = frozenset({
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
+})
+_STDLIB_RANDOM_OK = frozenset({"Random"})
+
+
+@register_rule
+class GlobalRNG(Rule):
+    code = "RL001"
+    name = "global-rng"
+    severity = "error"
+    invariant = ("all randomness flows through an explicitly seeded "
+                 "np.random.Generator threaded from the caller")
+    rationale = ("module-global RNG state (np.random.*, random.*) makes "
+                 "trajectories depend on import order and prior calls — the "
+                 "per-seed bit-identical-engine contract dies silently")
+    fix = ("thread a np.random.default_rng(seed) / Generator parameter; "
+           "never call the np.random or random module functions")
+    scope = RUNTIME_SCOPE
+
+    def check(self, tree: ast.AST) -> None:
+        self._has_stdlib_random = any(
+            isinstance(n, ast.Import) and any(a.name == "random" for a in n.names)
+            for n in ast.walk(tree))
+        self.visit(tree)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "numpy.random":
+            for a in node.names:
+                if a.name not in _NP_RANDOM_OK:
+                    self.report(node, f"import of global-state RNG entry "
+                                      f"point numpy.random.{a.name}")
+        elif node.module == "random":
+            for a in node.names:
+                if a.name not in _STDLIB_RANDOM_OK:
+                    self.report(node, f"import of stdlib global-state RNG "
+                                      f"random.{a.name}")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        path = dotted(node.func)
+        if path:
+            parts = path.split(".")
+            if (len(parts) == 3 and parts[0] in ("np", "numpy")
+                    and parts[1] == "random" and parts[2] not in _NP_RANDOM_OK):
+                self.report(node, f"global-state RNG call {path}() — thread "
+                                  f"a seeded np.random.Generator instead")
+            elif (len(parts) == 2 and parts[0] == "random"
+                    and self._has_stdlib_random
+                    and parts[1] not in _STDLIB_RANDOM_OK):
+                self.report(node, f"stdlib global-state RNG call {path}() — "
+                                  f"thread a seeded np.random.Generator instead")
+        self.generic_visit(node)
+
+
+@register_rule
+class UnseededRNG(Rule):
+    code = "RL002"
+    name = "unseeded-rng"
+    severity = "error"
+    invariant = "every Generator/SeedSequence is constructed from an explicit seed"
+    rationale = ("default_rng() with no arguments seeds from OS entropy — "
+                 "two runs of the same spec diverge on the first draw")
+    fix = "pass the seed (or a derived SeedSequence) explicitly"
+    scope = RUNTIME_SCOPE
+
+    _CTORS = frozenset({"default_rng", "SeedSequence", "PCG64", "PCG64DXSM",
+                        "Philox", "SFC64", "MT19937", "Random"})
+
+    def visit_Call(self, node: ast.Call) -> None:
+        path = dotted(node.func)
+        last = path.rsplit(".", 1)[-1] if path else None
+        if last in self._CTORS and self._looks_rng(path):
+            seeded = bool(node.args) and not (
+                isinstance(node.args[0], ast.Constant)
+                and node.args[0].value is None)
+            seeded = seeded or any(k.arg in ("seed", "entropy", "key", "x")
+                                   for k in node.keywords)
+            if not seeded:
+                self.report(node, f"{path}() without an explicit seed draws "
+                                  f"OS entropy — pass the seed")
+        self.generic_visit(node)
+
+    @staticmethod
+    def _looks_rng(path: str) -> bool:
+        parts = path.split(".")
+        if parts[-1] == "Random":
+            return parts[0] == "random" and len(parts) == 2
+        return len(parts) == 1 or "random" in parts[:-1] or parts[0] in ("np", "numpy")
+
+
+@register_rule
+class WallClock(Rule):
+    code = "RL003"
+    name = "wall-clock"
+    severity = "error"
+    invariant = "trajectory modules never read the wall clock"
+    rationale = ("a time.time()/perf_counter() read in core/, kernels/ or "
+                 "comm/ means some branch or metric can depend on host speed "
+                 "— timings belong to the drivers (benchmarks/, api facade)")
+    fix = "hoist timing to the caller or accept a timestamp parameter"
+    scope = TRAJECTORY_SCOPE
+
+    _TIME_FNS = frozenset({"time", "time_ns", "monotonic", "monotonic_ns",
+                           "perf_counter", "perf_counter_ns", "process_time",
+                           "process_time_ns"})
+    _DT_FNS = frozenset({"now", "utcnow", "today"})
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "time":
+            for a in node.names:
+                if a.name in self._TIME_FNS:
+                    self.report(node, f"import of wall-clock reader "
+                                      f"time.{a.name} in a trajectory module")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        path = dotted(node.func)
+        if path:
+            parts = path.split(".")
+            if parts[0] == "time" and len(parts) == 2 and parts[1] in self._TIME_FNS:
+                self.report(node, f"wall-clock read {path}() in a trajectory "
+                                  f"module — hoist timing to the caller")
+            elif (parts[-1] in self._DT_FNS and len(parts) >= 2
+                    and parts[-2] in ("datetime", "date")):
+                self.report(node, f"wall-clock read {path}() in a trajectory "
+                                  f"module — hoist timing to the caller")
+        self.generic_visit(node)
+
+
+# ------------------------------------------------------------------------------
+# Registry purity
+# ------------------------------------------------------------------------------
+
+@register_rule
+class RegistryLiteral(Rule):
+    code = "RL004"
+    name = "registry-literal"
+    severity = "error"
+    invariant = ("engine/strategy/objective/family name literals only branch "
+                 "behavior inside the registry modules")
+    rationale = ("a stray `if engine == \"pallas\"` outside the registries "
+                 "recreates the pre-PR4 string dispatch: new engines and "
+                 "REPRO_ENGINE overrides silently miss the branch")
+    fix = ("resolve through repro.core.engines.get_engine/resolve_rows or "
+           "the specs/topologies registries; keep name switches in "
+           + ", ".join(REGISTRY_MODULES))
+    scope = RUNTIME_SCOPE
+    exclude = REGISTRY_MODULES
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        for op, comp in zip(node.ops, node.comparators):
+            if isinstance(op, (ast.Eq, ast.NotEq)):
+                for side in (node.left, comp):
+                    self._check_literal(node, side)
+            elif isinstance(op, (ast.In, ast.NotIn)):
+                if isinstance(comp, (ast.Tuple, ast.List, ast.Set)):
+                    for elt in comp.elts:
+                        self._check_literal(node, elt)
+        self.generic_visit(node)
+
+    def _check_literal(self, node: ast.Compare, expr: ast.expr) -> None:
+        if (isinstance(expr, ast.Constant) and isinstance(expr.value, str)
+                and expr.value in REGISTRY_NAMES):
+            kind = ("engine" if expr.value in ENGINE_NAMES else
+                    "strategy" if expr.value in STRATEGY_NAMES else
+                    "objective" if expr.value in OBJECTIVE_NAMES else "family")
+            self.report(node, f"comparison against registered {kind} name "
+                              f"{expr.value!r} outside the registry modules — "
+                              f"resolve through the registry instead")
+
+
+# ------------------------------------------------------------------------------
+# Pallas kernel contracts
+# ------------------------------------------------------------------------------
+
+class _TracedRule(Rule):
+    """Shared machinery: run a per-function check over every traced fn."""
+
+    scope = JAX_SCOPE
+
+    def check(self, tree: ast.AST) -> None:
+        self.tree = tree
+        for fn, kind in jaxtrace.traced_functions(tree).items():
+            self.check_traced(fn, kind)
+
+    def check_traced(self, fn, kind: str) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    @staticmethod
+    def fn_label(fn) -> str:
+        return getattr(fn, "name", "<lambda>")
+
+
+@register_rule
+class KernelInt64(_TracedRule):
+    code = "RL005"
+    name = "kernel-int64"
+    severity = "error"
+    invariant = ("traced/kernel code is 32-bit-word safe: no int64/uint64 "
+                 "dtypes or >int32 literals")
+    rationale = ("TPU vector units have no 64-bit lanes — an int64 dtype in "
+                 "a Pallas kernel or jitted sweep fails to lower on device "
+                 "(or silently downcasts under x64-off), diverging from the "
+                 "uint64 host engines' bit-identical contract")
+    fix = ("keep device words uint32/int32 (WORD = 32 packing); finish "
+           "int64 accumulations on the host after the dispatch")
+
+    _BAD_ATTRS = frozenset({"int64", "uint64"})
+    _I32_MAX = 2**31 - 1
+
+    def check_traced(self, fn, kind: str) -> None:
+        label = self.fn_label(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Attribute) and node.attr in self._BAD_ATTRS:
+                self.report(node, f"64-bit dtype .{node.attr} inside traced "
+                                  f"function {label!r} — device words are "
+                                  f"32-bit")
+            elif isinstance(node, ast.Constant):
+                if (isinstance(node.value, str) and node.value in self._BAD_ATTRS):
+                    self.report(node, f"64-bit dtype string {node.value!r} "
+                                      f"inside traced function {label!r}")
+                elif (isinstance(node.value, int)
+                      and not isinstance(node.value, bool)
+                      and abs(node.value) > self._I32_MAX):
+                    self.report(node, f"literal {node.value} exceeds int32 "
+                                      f"range inside traced function {label!r}")
+
+
+@register_rule
+class TracedBranch(_TracedRule):
+    code = "RL006"
+    name = "traced-branch"
+    severity = "error"
+    invariant = "no Python if/while/assert on traced values"
+    rationale = ("Python control flow on a tracer raises "
+                 "TracerBoolConversionError at best; at worst it bakes one "
+                 "branch into the compiled kernel and the trajectory "
+                 "silently depends on the tracing example")
+    fix = "use jnp.where / lax.cond / lax.while_loop (kernel loops unroll over static shapes)"
+
+    def check_traced(self, fn, kind: str) -> None:
+        tainted = jaxtrace.tainted_names(fn)
+        if not tainted:
+            return
+        label = self.fn_label(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)) and node is not fn:
+                    continue
+                test = None
+                what = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test, what = node.test, type(node).__name__.lower()
+                elif isinstance(node, ast.IfExp):
+                    test, what = node.test, "conditional expression"
+                elif isinstance(node, ast.Assert):
+                    test, what = node.test, "assert"
+                if test is not None and jaxtrace.expr_references(test, tainted):
+                    self.report(node, f"Python {what} on a traced value in "
+                                      f"{label!r} — use jnp.where/lax.cond/"
+                                      f"lax.while_loop")
+
+
+@register_rule
+class HostSync(_TracedRule):
+    code = "RL007"
+    name = "host-sync"
+    severity = "error"
+    invariant = "traced functions never synchronize back to the host"
+    rationale = (".item()/.tolist()/np.asarray on a traced value forces a "
+                 "device round-trip per call (or a ConcretizationTypeError) "
+                 "— the one-dispatch-per-iteration polish contract breaks")
+    fix = "return arrays from the dispatch and convert on the host"
+
+    _SYNC_METHODS = frozenset({"item", "tolist"})
+    _NP_SYNC = frozenset({"asarray", "array", "copyto", "save", "ascontiguousarray"})
+    _BUILTINS = frozenset({"float", "int", "bool", "complex"})
+
+    def check_traced(self, fn, kind: str) -> None:
+        tainted = jaxtrace.tainted_names(fn)
+        label = self.fn_label(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            path = dotted(node.func)
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in self._SYNC_METHODS):
+                self.report(node, f".{node.func.attr}() inside traced "
+                                  f"function {label!r} forces a host sync")
+            elif path and tainted:
+                parts = path.split(".")
+                arg_hit = any(jaxtrace.expr_references(a, tainted)
+                              for a in node.args)
+                if (len(parts) == 2 and parts[0] in ("np", "numpy")
+                        and parts[1] in self._NP_SYNC and arg_hit):
+                    self.report(node, f"{path}() on a traced value in "
+                                      f"{label!r} forces a host sync — keep "
+                                      f"the math in jnp")
+                elif (len(parts) == 1 and parts[0] in self._BUILTINS
+                        and arg_hit):
+                    self.report(node, f"{path}() on a traced value in "
+                                      f"{label!r} concretizes the tracer")
+
+
+@register_rule
+class JitMutableGlobal(_TracedRule):
+    code = "RL008"
+    name = "jit-global"
+    severity = "warning"
+    invariant = "traced functions do not read mutable module globals"
+    rationale = ("jit captures globals by value at trace time — mutating "
+                 "the dict/list later silently does nothing (stale compile "
+                 "cache), the classic heisenbug of jitted closures")
+    fix = "pass the value as an argument or a static kwarg"
+
+    def check(self, tree: ast.AST) -> None:
+        self._mutable_globals = set()
+        mod_body = tree.body if isinstance(tree, ast.Module) else []
+        for stmt in mod_body:
+            if isinstance(stmt, ast.Assign):
+                v = stmt.value
+                mutable = isinstance(v, (ast.Dict, ast.List, ast.Set,
+                                         ast.DictComp, ast.ListComp, ast.SetComp))
+                if isinstance(v, ast.Call):
+                    mutable = dotted(v.func) in ("dict", "list", "set",
+                                                 "collections.defaultdict",
+                                                 "collections.OrderedDict",
+                                                 "collections.Counter")
+                if mutable:
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            self._mutable_globals.add(t.id)
+        super().check(tree)
+
+    def check_traced(self, fn, kind: str) -> None:
+        if not self._mutable_globals:
+            return
+        args = fn.args
+        local = {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+        label = self.fn_label(fn)
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                    and node.id in self._mutable_globals
+                    and node.id not in local):
+                self.report(node, f"traced function {label!r} reads mutable "
+                                  f"module global {node.id!r} — jit captures "
+                                  f"it by value at trace time")
+
+
+# ------------------------------------------------------------------------------
+# Iteration-order safety
+# ------------------------------------------------------------------------------
+
+@register_rule
+class UnsortedIter(Rule):
+    code = "RL009"
+    name = "unsorted-iter"
+    severity = "error"
+    invariant = ("iteration over sets and directory listings is explicitly "
+                 "ordered (sorted) before it can feed RNG draws, edge lists "
+                 "or hashes")
+    rationale = ("set iteration order varies across processes (hash "
+                 "randomization) and os.listdir order across filesystems — "
+                 "any consumer that draws RNG or builds edge lists per "
+                 "element silently forks the trajectory")
+    fix = "wrap the iterable in sorted(...)"
+    scope = RUNTIME_SCOPE + ("tools/",)
+
+    _FS_ATTRS = frozenset({"listdir", "scandir", "iglob", "glob", "iterdir",
+                           "rglob"})
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iter(node.iter)
+        self.generic_visit(node)
+
+    def visit_comprehension_gens(self, gens) -> None:
+        for gen in gens:
+            self._check_iter(gen.iter)
+
+    def visit_ListComp(self, node):
+        self.visit_comprehension_gens(node.generators)
+        self.generic_visit(node)
+
+    visit_SetComp = visit_ListComp
+    visit_DictComp = visit_ListComp
+    visit_GeneratorExp = visit_ListComp
+
+    def _check_iter(self, it: ast.expr) -> None:
+        if isinstance(it, ast.Call) and dotted(it.func) == "enumerate" and it.args:
+            it = it.args[0]
+        if isinstance(it, (ast.Set, ast.SetComp)):
+            self.report(it, "iteration over a set literal — order is "
+                            "hash-dependent; wrap in sorted(...)")
+        elif isinstance(it, ast.Call):
+            path = dotted(it.func)
+            last = path.rsplit(".", 1)[-1] if path else getattr(
+                it.func, "attr", None)
+            if path in ("set", "frozenset"):
+                self.report(it, f"iteration over {path}(...) — order is "
+                                f"hash-dependent; wrap in sorted(...)")
+            elif last in self._FS_ATTRS:
+                self.report(it, f"iteration over {last}(...) — filesystem "
+                                f"order is platform-dependent; wrap in "
+                                f"sorted(...)")
+        elif isinstance(it, ast.BinOp) and isinstance(
+                it.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            for side in (it.left, it.right):
+                if (isinstance(side, (ast.Set, ast.SetComp))
+                        or (isinstance(side, ast.Call)
+                            and dotted(side.func) in ("set", "frozenset"))):
+                    self.report(it, "iteration over a set expression — order "
+                                    "is hash-dependent; wrap in sorted(...)")
+                    break
